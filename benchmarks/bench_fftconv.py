@@ -1,0 +1,69 @@
+"""FFT long-convolution layer vs direct convolution — the LM integration.
+
+Shows the O(L log L) crossover that justifies the spectral-mixer layers in
+the SSM/hybrid configs, and benchmarks the spectral block forward itself.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.conv import fft_conv
+from repro.models.layers import spectral
+from repro.utils.params import unzip
+
+LENGTHS = [256, 1024, 4096, 16384]
+
+
+def _time(fn, *args, reps=3, warmup=1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _direct_conv(x, h):
+    # causal direct conv via correlation with flipped kernel
+    L = x.shape[-1]
+    pad = h.shape[-1] - 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, 0)))
+    return jax.lax.conv_general_dilated(
+        xp[:, :, None, :], h[:, None, None, ::-1],
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=x.shape[1],
+    )[:, :, 0, :L]
+
+
+def main(emit=print):
+    emit("fftconv.name,seq_len,filter_len,direct_ms,fft_ms,speedup")
+    D = 8
+    for L in LENGTHS:
+        x = np.random.randn(2, D, L).astype(np.float32)
+        h = np.random.randn(D, L).astype(np.float32)  # global filter
+        f_fft = jax.jit(lambda a, b: fft_conv(a, b))
+        f_dir = jax.jit(_direct_conv)
+        t_f = _time(f_fft, jnp.asarray(x), jnp.asarray(h))
+        t_d = _time(f_dir, jnp.asarray(x), jnp.asarray(h))
+        emit(f"fftconv,{L},{L},{t_d*1e3:.2f},{t_f*1e3:.2f},{t_d/t_f:.2f}")
+
+    emit("spectral_block.name,seq_len,fwd_ms")
+    cfg = ModelConfig(d_model=128, spectral_filter_len=1024, vocab_size=64)
+    params, _ = unzip(spectral.spectral_init(jax.random.PRNGKey(0), cfg, jnp.float32))
+    fwd = jax.jit(lambda p, x: spectral.spectral_forward(p, x, cfg=cfg))
+    for L in (1024, 4096):
+        x = jnp.asarray(np.random.randn(2, L, 128).astype(np.float32))
+        emit(f"spectral_block,{L},{_time(fwd, params, x)*1e3:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Roofline summary from the dry-run artifacts (reads artifacts/dryrun/*).
+
+Emits the per-cell three-term roofline as CSV — the same numbers
+EXPERIMENTS.md §Roofline tabulates.  Run the dry-run first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def main(emit=print):
+    emit(
+        "roofline.arch,shape,mesh,compute_ms,memory_ms,collective_ms,"
+        "bound,peak_mem_gb,fits_hbm,useful_flops_frac"
+    )
+    files = sorted(glob.glob(os.path.join(ART, "*.json")))
+    if not files:
+        emit("# no dry-run artifacts found — run repro.launch.dryrun first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            emit(f"# FAILED {r['arch']},{r['shape']},{r['mesh']}: {r.get('error','')[:60]}")
+            continue
+        t = r["roofline"]
+        emit(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{t['compute_s']*1e3:.2f},{t['memory_s']*1e3:.2f},"
+            f"{t['collective_s']*1e3:.2f},{t['bound']},"
+            f"{r['per_chip']['peak_memory_bytes']/1e9:.2f},{r['fits_hbm']},"
+            f"{r.get('useful_flops_frac', 0):.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Table 1 / Figs 7-10: our FFT vs FFTW stand-in vs CUFFT stand-in.
+
+Stand-ins on this CPU container:
+  FFTW  → numpy.pocketfft (the highly-tuned portable CPU FFT)
+  CUFFT → jnp.fft (XLA's native FFT through the same jit pipeline as ours)
+  ours  → the paper's algorithm, four-step memory-optimized plan, 'xla'
+          backend (identical arithmetic to the Pallas kernels; the kernels
+          themselves are TPU-targeted and only run in interpret mode here —
+          interpret-mode timing is meaningless, see EXPERIMENTS.md).
+
+The paper's Table 1 sizes 16..65536, single transforms, plus the batched
+mid-size regime the paper's SAR motivation cares about.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fft as F
+
+SIZES = [16, 64, 256, 1024, 4096, 16384, 65536]
+
+
+def _time(fn, *args, reps=5, warmup=2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args)) if hasattr(fn(*args), "block_until_ready") else fn(*args)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _time_np(fn, *args, reps=5, warmup=1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(batch: int = 1):
+    rows = []
+    for n in SIZES:
+        x = (np.random.randn(batch, n) + 1j * np.random.randn(batch, n)).astype(
+            np.complex64
+        )
+        xj = jnp.asarray(x)
+
+        ours = jax.jit(lambda v: F.fft(v, backend="xla"))
+        cufft_standin = jax.jit(jnp.fft.fft)
+        t_ours = _time(ours, xj)
+        t_jnp = _time(cufft_standin, xj)
+        t_np = _time_np(np.fft.fft, x)
+        rows.append((n, batch, t_np, t_jnp, t_ours))
+    return rows
+
+
+def main(emit=print):
+    emit("table1.name,n,batch,fftw_standin_us,cufft_standin_us,ours_us,"
+         "speedup_vs_fftw,speedup_vs_cufft")
+    for batch in (1, 64):
+        for n, b, t_np, t_jnp, t_ours in run(batch):
+            emit(
+                f"table1,{n},{b},{t_np*1e6:.1f},{t_jnp*1e6:.1f},{t_ours*1e6:.1f},"
+                f"{t_np/t_ours:.2f},{t_jnp/t_ours:.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

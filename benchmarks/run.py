@@ -1,0 +1,29 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table1 sar # subset
+
+Emits ``name,...`` CSV rows (paper-table stand-ins documented per module).
+"""
+
+import sys
+
+from benchmarks import bench_fftconv, bench_roofline, bench_sar, bench_table1
+
+SUITES = {
+    "table1": bench_table1.main,     # paper Table 1 / Figs 7-10
+    "sar": bench_sar.main,           # paper §3 SAR motivation
+    "fftconv": bench_fftconv.main,   # LM integration (spectral layers)
+    "roofline": bench_roofline.main, # dry-run roofline summary
+}
+
+
+def main() -> None:
+    picks = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    for name in picks:
+        print(f"# ---- {name} ----", flush=True)
+        SUITES[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: the memory-optimized FFT public API in five minutes.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fft as F
+from repro.core import plan
+from repro.core.conv import fft_conv
+
+# ---- 1. plan inspection: the paper's kernel-call schedule -----------------
+for n in (1024, 65536, 2**20):
+    print(plan.describe(n))
+
+# ---- 2. complex FFT, three backends ---------------------------------------
+x = (np.random.randn(4, 4096) + 1j * np.random.randn(4, 4096)).astype(np.complex64)
+for backend in ("stockham", "xla", "pallas"):  # pallas runs interpret on CPU
+    y = F.fft(jnp.asarray(x), backend=backend)
+    err = np.abs(np.asarray(y) - np.fft.fft(x)).max()
+    print(f"backend={backend:9s} max err vs numpy: {err:.2e}")
+
+# ---- 3. real FFT (half the work for real signals) --------------------------
+sig = np.random.randn(2, 8192).astype(np.float32)
+Xr, Xi = F.rfft(jnp.asarray(sig))
+print("rfft bins:", Xr.shape, " roundtrip err:",
+      float(jnp.abs(F.irfft((Xr, Xi), 8192) - sig).max()))
+
+# ---- 4. FFT long convolution (the LM-layer integration) --------------------
+u = np.random.randn(1, 16, 2048).astype(np.float32)   # (B, D, L)
+h = np.random.randn(16, 2048).astype(np.float32)      # per-channel filters
+y = fft_conv(jnp.asarray(u), jnp.asarray(h))
+print("fft_conv out:", y.shape)
+
+# ---- 5. under jit, composed with autodiff ----------------------------------
+g = jax.grad(lambda v: jnp.sum(jnp.abs(F.fft(v)) ** 2))(jnp.asarray(x))
+print("grad of spectral energy == 2N·conj(x):",
+      bool(jnp.allclose(g, 2 * 4096 * jnp.conj(jnp.asarray(x)), rtol=1e-3)))

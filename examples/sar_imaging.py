@@ -1,0 +1,58 @@
+"""SAR range–Doppler image formation with the repo FFT (paper §3 motivation).
+
+Simulates raw returns of point scatterers, then: range compression (matched
+filter via fft_conv) → azimuth FFT → image peak check.  Everything flows
+through repro.core's memory-optimized transforms.
+
+  PYTHONPATH=src python examples/sar_imaging.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fft as F
+from repro.core.fft_xla import cmul
+
+# ---- simulate raw data ------------------------------------------------------
+n_az, n_rg = 256, 2048           # azimuth pulses x range samples
+chirp_len = 256
+rng = np.random.default_rng(0)
+
+t = np.arange(chirp_len, dtype=np.float32)
+chirp = np.exp(1j * 0.002 * t**2).astype(np.complex64)  # LFM pulse
+
+targets = [(64, 500), (128, 1200), (200, 300)]  # (azimuth, range) bins
+raw = np.zeros((n_az, n_rg), np.complex64)
+for az0, rg0 in targets:
+    az_phase = np.exp(1j * 0.01 * (np.arange(n_az) - az0) ** 2)
+    for a in range(n_az):
+        seg = slice(rg0, rg0 + chirp_len)
+        raw[a, seg] += az_phase[a] * chirp
+raw += (rng.standard_normal(raw.shape) + 1j * rng.standard_normal(raw.shape)).astype(
+    np.complex64
+) * 0.05
+
+# ---- range compression: matched filter in the frequency domain -------------
+xr, xi = jnp.asarray(raw.real), jnp.asarray(raw.imag)
+Hr, Hi = F.fft((jnp.asarray(np.conj(chirp[::-1]).real), jnp.asarray(np.conj(chirp[::-1]).imag)))
+# pad filter spectrum to range length by transforming the padded kernel
+hpad = np.zeros(n_rg, np.complex64)
+hpad[:chirp_len] = np.conj(chirp[::-1])
+Hr, Hi = F.fft((jnp.asarray(hpad.real), jnp.asarray(hpad.imag)))
+Xr, Xi = F.fft((xr, xi))
+Yr, Yi = cmul(Xr, Xi, Hr[None, :], Hi[None, :])
+rc_r, rc_i = F.ifft((Yr, Yi))
+
+# ---- azimuth compression: FFT across pulses + quadratic dechirp -------------
+az = np.exp(-1j * 0.01 * (np.arange(n_az) - n_az / 2) ** 2).astype(np.complex64)
+dr, di = cmul(rc_r, rc_i, jnp.asarray(az.real)[:, None], jnp.asarray(az.imag)[:, None])
+ir, ii = F.fft((jnp.swapaxes(dr, 0, 1), jnp.swapaxes(di, 0, 1)))
+image = np.hypot(np.asarray(ir), np.asarray(ii)).T  # (az_freq, range)
+
+# ---- verify: bright peaks near the injected targets' range bins -------------
+print("image:", image.shape, "dynamic range: %.1f dB"
+      % (20 * np.log10(image.max() / (np.median(image) + 1e-6))))
+for az0, rg0 in targets:
+    rg_peak = int(np.argmax(image.max(axis=0)[rg0 - 32 : rg0 + chirp_len + 32])) + rg0 - 32
+    print(f"target at range bin {rg0:5d}: peak found at {rg_peak:5d} "
+          f"({'OK' if abs(rg_peak - (rg0 + chirp_len - 1)) <= 8 else 'MISS'})")

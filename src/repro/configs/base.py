@@ -1,0 +1,210 @@
+"""Config system: model / parallelism / training / shape definitions.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.configs``; ``get_config(arch_id)`` resolves them by registry name.
+Input shapes are ``ShapeConfig`` entries shared across the LM family
+(train_4k / prefill_32k / decode_32k / long_500k per the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+__all__ = [
+    "ModelConfig",
+    "ParallelConfig",
+    "TrainConfig",
+    "ShapeConfig",
+    "LM_SHAPES",
+    "get_config",
+    "list_archs",
+    "shapes_for",
+    "register",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # --- identity ------------------------------------------------------
+    name: str = "unnamed"
+    family: str = "dense"  # dense | moe | ssm | hybrid | audio | vlm
+    # --- trunk ---------------------------------------------------------
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0  # 0 → d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    act: str = "silu"  # silu (SwiGLU) | gelu (GeGLU)
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # --- attention -----------------------------------------------------
+    sliding_window: Optional[int] = None  # window size for local layers
+    local_global_ratio: int = 0  # e.g. 5 → pattern [local]*5 + [global]
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    rope_theta: float = 10000.0
+    rope_kind: str = "standard"  # standard | mrope
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+    # --- MoE -----------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_dense_residual: bool = False  # arctic: dense MLP in parallel
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+    # --- SSM / recurrent -----------------------------------------------
+    ssm_state: int = 0          # Mamba2 d_state
+    ssm_heads: int = 0          # Mamba2 / mLSTM heads (0 → num_heads)
+    ssm_expand: int = 2         # Mamba2 expansion
+    conv_width: int = 4         # Mamba2 short conv
+    chunk_size: int = 256       # chunked linear-recurrence block length
+    shared_attn_every: int = 0  # zamba2: shared transformer block cadence
+    # --- block pattern (overrides the derived one when non-empty) -------
+    block_pattern: Tuple[str, ...] = ()
+    # --- modality frontend stubs ----------------------------------------
+    frontend: Optional[str] = None  # audio | vision
+    frontend_len: int = 0  # prefix positions fed by precomputed embeddings
+    # --- paper integration ----------------------------------------------
+    use_spectral_mixer: bool = False  # swap attention for FFT long-conv
+    spectral_filter_len: int = 1024
+    # --- numerics / execution -------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    attn_chunk: int = 1024      # q-block size for chunked attention
+    attn_chunk_threshold: int = 2048  # S above this uses chunked attention
+    kv_cache_dtype: str = "bf16"  # bf16 | int8 (quantized decode cache)
+    decode_cache_mode: str = "carry"  # carry | ys (scan cache passing; §Perf)
+    loss_chunk: int = 512       # vocab-loss sequence chunking
+
+    # --- derived ---------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def resolved_ssm_heads(self) -> int:
+        return self.ssm_heads or self.num_heads
+
+    def pattern(self) -> Tuple[str, ...]:
+        """Per-layer block kinds (the scan stack consumes this)."""
+        if self.block_pattern:
+            return self.block_pattern
+        if self.family in ("dense", "audio", "vlm", "moe"):
+            kind = "moe" if self.family == "moe" else "attn"
+            if self.use_spectral_mixer:
+                # paper-integration ablation: alternate FFT long-conv mixing
+                # with attention (Hyena-style hybrid).
+                assert self.num_layers % 2 == 0, self.num_layers
+                return ("spectral", kind) * (self.num_layers // 2)
+            if self.local_global_ratio:
+                unit = ["attn_local"] * self.local_global_ratio + ["attn"]
+                reps = self.num_layers // len(unit)
+                assert reps * len(unit) == self.num_layers, (
+                    self.num_layers,
+                    len(unit),
+                )
+                return tuple(unit) * reps
+            if self.sliding_window and not self.local_global_ratio:
+                return ("attn_local",) * self.num_layers
+            return (kind,) * self.num_layers
+        raise ValueError(
+            f"family {self.family!r} must set block_pattern explicitly"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How logical axes map onto the mesh (see repro.sharding.logical)."""
+
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: Optional[str] = None  # present on the multi-pod mesh
+    fsdp: bool = False              # shard params over the data axis too
+    sequence_parallel: bool = False  # shard long KV caches over data
+    remat_policy: str = "minimal"   # minimal | full | none
+    # Decode-time layout for FSDP-sharded weights: keep weights stationary
+    # (embed over data) and replicate the tiny one-token activations instead
+    # of all-gathering every weight matrix each step (§Perf hillclimb 2).
+    decode_weight_stationary: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"  # adamw | adafactor | sgd
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    grad_clip: float = 1.0
+    batch_size: int = 8
+    seq_len: int = 512
+    microbatches: int = 1        # gradient accumulation / overlap
+    grad_compression: bool = False  # int8 + error feedback
+    z_loss: float = 1e-4
+    seed: int = 0
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+LM_SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+_REGISTRY: dict[str, str] = {
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1p8b",
+    "yi-6b": "repro.configs.yi_6b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3p8b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "fftbench": "repro.configs.fftbench",
+}
+
+_EXTRA: dict[str, ModelConfig] = {}
+
+
+def register(name: str, cfg: ModelConfig) -> None:
+    _EXTRA[name] = cfg
+
+
+def list_archs() -> list[str]:
+    return list(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch in _EXTRA:
+        return _EXTRA[arch]
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(_REGISTRY[arch])
+    return mod.CONFIG
+
+
+def shapes_for(arch: str) -> list[ShapeConfig]:
+    """The assignment's shape cells for this arch (long_500k gated)."""
+    mod = importlib.import_module(_REGISTRY[arch])
+    names = getattr(mod, "SHAPES", ["train_4k", "prefill_32k", "decode_32k"])
+    return [LM_SHAPES[n] for n in names if n in LM_SHAPES]

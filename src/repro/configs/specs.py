@@ -1,0 +1,55 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+The dry-run lowers against these — weak-type-correct, shardable, zero
+allocation.  For decode shapes the specs include the full KV/SSM cache
+pytree (built with ``jax.eval_shape`` over ``model.cache_init``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["input_specs", "decode_state_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model-input ShapeDtypeStructs for a train/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict = {}
+    if cfg.frontend == "audio":
+        # EnCodec frontend stub: precomputed frame embeddings.
+        specs["frame_embeds"] = _sds((b, s, cfg.d_model), cfg.compute_dtype)
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.frontend == "vision":
+        fl = min(cfg.frontend_len, s)
+        specs["vision_embeds"] = _sds((b, fl, cfg.d_model), cfg.compute_dtype)
+        specs["mrope_positions"] = _sds((b, 3, s), jnp.int32)
+    if shape.kind == "train":
+        specs["targets"] = _sds((b, s), jnp.int32)
+    return specs
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    """(token_specs, cache_specs, t_spec) for a serve_step lowering."""
+    b, s = shape.global_batch, shape.seq_len
+    from repro.models import model as model_lib
+
+    caches = jax.eval_shape(
+        functools.partial(model_lib.cache_init, cfg, b, s, dtype=dtype)
+    )
+    if cfg.frontend == "audio":
+        tok = _sds((b,), jnp.int32)  # previous token ids (embeds via table)
+    else:
+        tok = _sds((b,), jnp.int32)
+    t = _sds((), jnp.int32)
+    return tok, caches, t

@@ -1,0 +1,44 @@
+"""The paper's primary contribution: memory-optimized FFT for TPU.
+
+Layers:
+  twiddle      precomputed LUTs (texture-memory analogue)
+  plan         HBM-round-trip schedule (kernel-call count analogue)
+  fft_xla      pure-JAX Stockham + four-step backends
+  fft          public API with backend dispatch (pallas | xla | stockham)
+  conv         FFT-based long convolution (LM integration point)
+  distributed  pencil FFT over mesh axes (pod-scale all-to-all schedule)
+"""
+
+from repro.core import conv, distributed, fft, fft_xla, plan, twiddle
+from repro.core.conv import fft_conv
+from repro.core.fft import fft as fft_fn
+from repro.core.fft import (
+    default_backend,
+    fft2,
+    ifft,
+    ifft2,
+    irfft,
+    rfft,
+    set_default_backend,
+)
+from repro.core.plan import FFTPlan, plan_fft
+
+__all__ = [
+    "conv",
+    "distributed",
+    "fft",
+    "fft_xla",
+    "plan",
+    "twiddle",
+    "fft_conv",
+    "fft_fn",
+    "fft2",
+    "ifft",
+    "ifft2",
+    "irfft",
+    "rfft",
+    "default_backend",
+    "set_default_backend",
+    "FFTPlan",
+    "plan_fft",
+]

@@ -1,0 +1,268 @@
+"""Distributed pencil FFT — the paper's hierarchy lifted to the pod level.
+
+On a single chip the paper's schedule bounds HBM↔on-chip round trips; across
+a TPU pod the analogous slow tier is ICI, and the analogous schedule bounds
+**all-to-all transposes**.  A length-N transform sharded over D devices is
+factored N = N1 · N2 (both divisible by D) and executed as:
+
+    a2a-transpose → local FFT(N1) → twiddle → a2a-transpose → local FFT(N2)
+    [→ a2a-transpose for natural output order]
+
+Every local FFT goes through :mod:`repro.core.fft` (i.e. the fused kernels on
+TPU), and the per-device twiddle slab is generated with traced iota from
+``lax.axis_index`` — no device ever materialises another shard's table.
+
+Beyond-paper optimisation (recorded in EXPERIMENTS.md §Perf): with
+``natural_order=False`` the spectrum stays in "k1-major" pencil layout and the
+inverse consumes it directly, so an fft→pointwise→ifft round trip (the
+long-conv pattern) costs **4** all-to-alls instead of 6.
+
+These functions use raw ``jax.lax`` collectives and must run inside a
+``shard_map`` body (or under jit with the axis bound); :func:`pfft_sharded`
+is the standalone convenience wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import fft as fft_lib
+from repro.core import plan as plan_lib
+from repro.core.fft_xla import cmul
+
+Planes = Tuple[jax.Array, jax.Array]
+
+__all__ = ["pfft", "pifft", "pencil_factors", "pfft_sharded", "pifft_sharded"]
+
+
+def pencil_factors(n: int, d: int) -> tuple[int, int]:
+    """Split n = n1 · n2 (powers of two), both divisible by d, near-square."""
+    n1, n2 = plan_lib.balanced_split(n)
+    while n1 % d and n2 >= d * 2:
+        n1 *= 2
+        n2 //= 2
+    if n1 % d or n2 % d:
+        raise ValueError(f"cannot pencil-split n={n} over {d} devices")
+    return n1, n2
+
+
+def _local_twiddle(n1: int, n2: int, q: int, axis_name: str, inverse: bool):
+    """Twiddle slab T[k1, n2] for this device's n2 ∈ [d·q, (d+1)·q)."""
+    d = jax.lax.axis_index(axis_name)
+    n = n1 * n2
+    k1 = jnp.arange(n1, dtype=jnp.int32)[:, None]
+    m2 = (d * q + jnp.arange(q, dtype=jnp.int32))[None, :]
+    red = ((k1.astype(jnp.int64) * m2.astype(jnp.int64)) % n).astype(jnp.float32)
+    ang = np.float32(2.0 * np.pi / n) * red
+    sign = 1.0 if inverse else -1.0
+    return jnp.cos(ang), sign * jnp.sin(ang)
+
+
+def _a2a(x, axis_name, split_axis, concat_axis):
+    return jax.lax.all_to_all(
+        x, axis_name, split_axis=split_axis, concat_axis=concat_axis, tiled=True
+    )
+
+
+def pfft(
+    xr: jax.Array,
+    xi: jax.Array,
+    *,
+    n: int,
+    axis_name: str,
+    num_shards: int,
+    inverse: bool = False,
+    natural_order: bool = True,
+    backend: str | None = None,
+) -> Planes:
+    """Distributed FFT over the last axis; call inside shard_map.
+
+    ``xr/xi``: local shard (..., n // num_shards) of the globally length-``n``
+    signal, contiguous (block) sharding.  Returns the local output shard.
+    With ``natural_order=False`` the output is in pencil (k1-major) layout:
+    global flat index k1·n2 + k2 holds X[k1 + n1·k2].
+    """
+    d = num_shards
+    n1, n2 = pencil_factors(n, d)
+    p, q = n1 // d, n2 // d
+    lead = xr.shape[:-1]
+    la = len(lead)  # number of leading batch axes
+
+    def rows_fft(ar, ai, inv):
+        return fft_lib._dispatch(ar, ai, inv, backend)
+
+    # Local shard is rows [d·p, (d+1)·p) of the (n1, n2) matrix.
+    xr = xr.reshape(*lead, p, n2)
+    xi = xi.reshape(*lead, p, n2)
+    # (1) a2a transpose → full columns n2 ∈ [d·q, (d+1)·q): (n1, q)
+    xr = _a2a(xr, axis_name, la + 1, la)
+    xi = _a2a(xi, axis_name, la + 1, la)
+    # (2) FFT over n1 (axis -2): swap to put it last.
+    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (q, n1)
+    xr, xi = rows_fft(xr, xi, inverse)
+    # (3) twiddle in (q, n1)^T layout.
+    twr, twi = _local_twiddle(n1, n2, q, axis_name, inverse)  # (n1, q)
+    xr, xi = cmul(xr, xi, twr.T, twi.T)
+    # (4) a2a transpose back → full rows k1 ∈ [d·p, (d+1)·p): (q, n1) → (n2, p)
+    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (n1, q)
+    xr = _a2a(xr, axis_name, la, la + 1)  # (n1, q) -> ... wait see below
+    xi = _a2a(xi, axis_name, la, la + 1)
+    # after split on rows (n1 → d·p) and concat on cols: (p, n2) with full rows.
+    # (5) FFT over n2 (last axis, local).  (For inverse=True the two leaf
+    # transforms already contribute 1/n1 · 1/n2 = 1/n scaling.)
+    xr, xi = rows_fft(xr, xi, inverse)
+    if not natural_order:
+        return xr.reshape(*lead, p * n2), xi.reshape(*lead, p * n2)
+    # (6) a2a transpose → natural order: C (p, n2) → C^T slab (q2, n1).
+    q2 = n2 // d
+    xr = _a2a(xr, axis_name, la + 1, la)  # (n1, q2): C columns slab
+    xi = _a2a(xi, axis_name, la + 1, la)
+    xr = jnp.swapaxes(xr, -1, -2)  # (q2, n1) = C^T rows = natural order
+    xi = jnp.swapaxes(xi, -1, -2)
+    return xr.reshape(*lead, q2 * n1), xi.reshape(*lead, q2 * n1)
+
+
+def pifft(
+    xr: jax.Array,
+    xi: jax.Array,
+    *,
+    n: int,
+    axis_name: str,
+    num_shards: int,
+    from_pencil: bool = False,
+    backend: str | None = None,
+) -> Planes:
+    """Distributed inverse FFT.
+
+    With ``from_pencil=True`` consumes the k1-major layout produced by
+    ``pfft(..., natural_order=False)`` using the mirrored schedule (no extra
+    reordering collective).
+    """
+    d = num_shards
+    n1, n2 = pencil_factors(n, d)
+    p, q = n1 // d, n2 // d
+    lead = xr.shape[:-1]
+    la = len(lead)
+
+    def rows_fft(ar, ai):
+        return fft_lib._dispatch(ar, ai, True, backend)
+
+    if not from_pencil:
+        # Natural order: device holds C^T rows (q, n1); transpose to pencil.
+        xr = xr.reshape(*lead, q, n1)
+        xi = xi.reshape(*lead, q, n1)
+        xr = _a2a(xr, axis_name, la + 1, la)  # (n2, p): wait -> see note
+        xi = _a2a(xi, axis_name, la + 1, la)
+        # now (n2·? ) — split n1 cols into d pieces of p, concat rows: (d·q, p)
+        # device holds C^T full columns k1 ∈ slab → transpose to C rows slab.
+        xr = jnp.swapaxes(xr, -1, -2)  # (p, n2)
+        xi = jnp.swapaxes(xi, -1, -2)
+    else:
+        xr = xr.reshape(*lead, p, n2)
+        xi = xi.reshape(*lead, p, n2)
+    # Mirror of pfft: inverse FFT over n2 (rows, local)...
+    xr, xi = rows_fft(xr, xi)
+    # a2a to column slabs: (p, n2) → (n1, q)
+    xr = _a2a(xr, axis_name, la + 1, la)
+    xi = _a2a(xi, axis_name, la + 1, la)
+    # conjugate twiddle, then inverse FFT over n1.
+    twr, twi = _local_twiddle(n1, n2, q, axis_name, inverse=True)  # (n1, q)
+    xr, xi = cmul(xr, xi, twr, twi)
+    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (q, n1)
+    xr, xi = rows_fft(xr, xi)
+    # back to block layout over the original axis: (q, n1) → (p, n2) rows.
+    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (n1, q)
+    xr = _a2a(xr, axis_name, la, la + 1)  # (p, n2)
+    xi = _a2a(xi, axis_name, la, la + 1)
+    return xr.reshape(*lead, p * n2), xi.reshape(*lead, p * n2)
+
+
+def pfft2d(
+    xr: jax.Array,
+    xi: jax.Array,
+    *,
+    n1: int,
+    n2: int,
+    axis_name: str,
+    num_shards: int,
+    inverse: bool = False,
+    backend: str | None = None,
+) -> Planes:
+    """Distributed 2-D FFT (SAR range/azimuth): rows local, columns pencil.
+
+    xr/xi: local shard (..., n1 // D, n2) of a (n1, n2) image, rows sharded
+    over ``axis_name``.  Row transforms are local; the column pass does one
+    all-to-all transpose, local FFTs, and transposes back — 2 all-to-alls
+    per direction (the 2-D analogue of the paper's two-exchange schedule).
+    """
+    d = num_shards
+    p = n1 // d
+    q = n2 // d
+    lead = xr.shape[:-2]
+    la = len(lead)
+
+    def rows_fft(ar, ai):
+        return fft_lib._dispatch(ar, ai, inverse, backend)
+
+    # (1) row FFTs over n2 — local and contiguous.
+    xr, xi = rows_fft(xr, xi)
+    # (2) a2a transpose: (p, n2) → (n1, q) column slabs.
+    xr = _a2a(xr, axis_name, la + 1, la)
+    xi = _a2a(xi, axis_name, la + 1, la)
+    # (3) column FFTs over n1: swap to last axis, transform, swap back.
+    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (q, n1)
+    xr, xi = rows_fft(xr, xi)
+    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (n1, q)
+    # (4) a2a back to row slabs (p, n2).
+    xr = _a2a(xr, axis_name, la, la + 1)
+    xi = _a2a(xi, axis_name, la, la + 1)
+    return xr, xi
+
+
+def _shard_wrap(fn, mesh: Mesh, axis: str):
+    from jax import shard_map
+
+    def wrapper(xr, xi, **kw):
+        nbatch = xr.ndim - 1
+        pspec = P(*([None] * nbatch + [axis]))
+        f = functools.partial(fn, axis_name=axis, **kw)
+        return shard_map(
+            f,
+            mesh=mesh,
+            in_specs=(pspec, pspec),
+            out_specs=(pspec, pspec),
+            check_vma=False,
+        )(xr, xi)
+
+    return wrapper
+
+
+def pfft_sharded(
+    xr, xi, mesh: Mesh, axis: str, *, inverse=False, natural_order=True, backend=None
+):
+    """Standalone distributed FFT: shards the last axis over ``mesh[axis]``."""
+    n = xr.shape[-1]
+    d = mesh.shape[axis]
+    return _shard_wrap(pfft, mesh, axis)(
+        xr,
+        xi,
+        n=n,
+        num_shards=d,
+        inverse=inverse,
+        natural_order=natural_order,
+        backend=backend,
+    )
+
+
+def pifft_sharded(xr, xi, mesh: Mesh, axis: str, *, from_pencil=False, backend=None):
+    n = xr.shape[-1]
+    d = mesh.shape[axis]
+    return _shard_wrap(pifft, mesh, axis)(
+        xr, xi, n=n, num_shards=d, from_pencil=from_pencil, backend=backend
+    )

@@ -1,0 +1,183 @@
+"""FFT execution planning — the paper's kernel-call schedule, TPU-sized.
+
+§2.3.2/§3 of the paper fix the number of *global-memory round trips* by data
+volume: one kernel call for N ≤ 1024 (whole transform in shared memory), two
+for N ≤ 32768, three or more beyond.  Here the fast tier is VMEM (~16 MB) and
+the slow tier is HBM, so the same schedule becomes:
+
+* ``direct``   — N ≤ DIRECT_MAX: one ``pallas_call``, a single DFT matmul
+  (the whole signal, the DFT matrix and the result co-resident in VMEM).
+* ``fused4``   — N ≤ FUSED_MAX: one ``pallas_call`` running Bailey's four-step
+  ``(W_{N1}·X ⊙ T)·W_{N2}`` entirely in VMEM → **one** HBM round trip.
+* ``split``    — larger N: factor N = N_outer · N_inner recursively; each
+  level adds one HBM re-tiling pass, mirroring the paper's 2-call / 3-call
+  regimes.
+
+The plan is pure metadata (hashable, cached) so backends — the Pallas kernels,
+the pure-XLA fallback, and the distributed pencil driver — share one
+factorisation policy and the tests can assert the schedule itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+__all__ = [
+    "DIRECT_MAX",
+    "FUSED_MAX",
+    "FFTPlan",
+    "Pass",
+    "plan_fft",
+    "balanced_split",
+    "vmem_bytes",
+]
+
+#: Largest N executed as a single direct DFT matmul (one (B,N)x(N,N) GEMM).
+DIRECT_MAX = 1024
+
+#: Largest N executed by the fused four-step kernel in one HBM round trip.
+#: 65536 = 256·256 keeps the per-block working set (signal tile + two DFT
+#: matrices + twiddle grid + scratch) under ~6 MB of VMEM — see vmem_bytes().
+FUSED_MAX = 65536
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def balanced_split(n: int, cap: int | None = None) -> tuple[int, int]:
+    """Split n = n1 * n2, powers of two, as square as possible, n1 >= n2.
+
+    If ``cap`` is given, n2 is forced ≤ cap (used by the recursive splitter so
+    the inner factor always lands in the fused-kernel regime).
+    """
+    if not _is_pow2(n):
+        raise ValueError(f"FFT length must be a power of two, got {n}")
+    lg = n.bit_length() - 1
+    lg1 = (lg + 1) // 2
+    n1, n2 = 1 << lg1, 1 << (lg - lg1)
+    if cap is not None:
+        while n2 > cap:
+            n2 //= 2
+            n1 *= 2
+    return n1, n2
+
+
+@dataclasses.dataclass(frozen=True)
+class Pass:
+    """One HBM round trip.
+
+    kind: 'direct' | 'fused4' — what the single pallas_call does.
+    n:    transform length handled by this pass.
+    n1/n2: four-step factors (fused4 only; n1*n2 == n).
+    """
+
+    kind: str
+    n: int
+    n1: int = 0
+    n2: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTPlan:
+    """Factorisation of a length-``n`` transform into HBM round trips.
+
+    ``levels`` lists the outer→inner split factors; ``leaf`` is the pass that
+    executes each innermost transform.  ``hbm_round_trips`` is the figure the
+    paper tabulates as "number of kernel calls".
+    """
+
+    n: int
+    levels: tuple[tuple[int, int], ...]  # ((n_outer, n_inner), ...) recursion
+    leaf_passes: tuple[Pass, ...]        # one leaf pass per distinct length
+
+    @property
+    def hbm_round_trips(self) -> int:
+        # Each split level re-tiles through HBM once between the two child
+        # transforms; a leaf is one trip.  For L levels of splitting the
+        # total is L + 1 (1 → direct/fused, 2 → one split, ...).
+        return len(self.levels) + 1
+
+    @property
+    def kernel_calls(self) -> int:
+        """Paper Table-1 terminology: number of distinct kernel launches."""
+        return self.hbm_round_trips
+
+
+def _leaf_pass(n: int) -> Pass:
+    if n <= DIRECT_MAX:
+        return Pass(kind="direct", n=n)
+    n1, n2 = balanced_split(n)
+    return Pass(kind="fused4", n=n, n1=n1, n2=n2)
+
+
+@functools.lru_cache(maxsize=512)
+def plan_fft(n: int, fused_max: int = FUSED_MAX) -> FFTPlan:
+    """Plan a length-``n`` power-of-two complex FFT."""
+    if not _is_pow2(n):
+        raise ValueError(f"FFT length must be a power of two, got {n}")
+    levels: list[tuple[int, int]] = []
+    m = n
+    while m > fused_max:
+        # Keep the inner factor in the fused regime, outer as small as
+        # possible: each level's twiddle grid and transpose cost scale with
+        # the outer factor.
+        n_outer, n_inner = balanced_split(m, cap=fused_max)
+        levels.append((n_outer, n_inner))
+        m = n_outer  # the outer transform may itself need splitting
+        if n_inner <= fused_max and n_outer <= fused_max:
+            break
+    # Distinct leaf lengths (outer and inner of the last level, or n itself).
+    if levels:
+        leaf_lengths = {levels[-1][0], levels[-1][1]}
+        for i in range(len(levels) - 1):
+            leaf_lengths.add(levels[i][1])
+    else:
+        leaf_lengths = {n}
+    leaves = tuple(sorted((_leaf_pass(m) for m in leaf_lengths), key=lambda p: p.n))
+    return FFTPlan(n=n, levels=tuple(levels), leaf_passes=leaves)
+
+
+def vmem_bytes(p: Pass, batch_tile: int) -> int:
+    """Estimated VMEM working set of one grid step of a leaf pass.
+
+    Split-complex float32 everywhere: signal tile in + out, DFT matrices,
+    twiddle grid, one intermediate.  Used by the kernel launcher to pick the
+    batch tile so the block fits comfortably in ~16 MB of VMEM (we budget
+    half of it, leaving room for Mosaic's double buffering).
+    """
+    f32 = 4
+    if p.kind == "direct":
+        sig = batch_tile * p.n * 2 * f32
+        mats = p.n * p.n * 2 * f32
+        return 2 * sig + mats
+    sig = batch_tile * p.n * 2 * f32             # x tile (= n1*n2 grid)
+    mats = (p.n1 * p.n1 + p.n2 * p.n2) * 2 * f32  # W1, W2
+    tw = p.n1 * p.n2 * 2 * f32                    # twiddle grid
+    return 3 * sig + mats + tw                    # in, intermediate, out
+
+
+def pick_batch_tile(p: Pass, budget: int = 8 * 1024 * 1024) -> int:
+    """Largest power-of-two batch tile whose working set fits the budget."""
+    bt = 512
+    while bt > 1 and vmem_bytes(p, bt) > budget:
+        bt //= 2
+    return bt
+
+
+def describe(n: int) -> str:
+    """Human-readable schedule, e.g. for logging/EXPERIMENTS.md."""
+    p = plan_fft(n)
+    parts = [f"N={n}: {p.hbm_round_trips} HBM round trip(s)"]
+    m = n
+    for no, ni in p.levels:
+        parts.append(f"split {m} -> {no} x {ni}")
+        m = no
+    for leaf in p.leaf_passes:
+        if leaf.kind == "direct":
+            parts.append(f"leaf direct DFT n={leaf.n}")
+        else:
+            parts.append(f"leaf fused four-step n={leaf.n} ({leaf.n1} x {leaf.n2})")
+    return "; ".join(parts)

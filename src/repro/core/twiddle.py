@@ -1,0 +1,122 @@
+"""Twiddle-factor / DFT-matrix factory — the paper's "texture memory" stage.
+
+The paper precomputes sine/cosine tables once and serves them through the GPU
+texture cache so butterfly kernels never recompute or re-fetch them from
+global memory (§2.3.1).  The TPU analogue implemented here:
+
+* tables are computed **once on the host** in float64 and cached per size
+  (``functools.lru_cache`` over hashable plan keys);
+* they enter kernels as **operands** whose BlockSpec maps every grid step to
+  the same block, so XLA/Mosaic keeps them VMEM-resident across the whole
+  batch grid — computed once, read at VMEM bandwidth, exactly the texture-LUT
+  behaviour;
+* for sizes too large to embed as constants, :func:`traced_twiddle` generates
+  them with on-device iota arithmetic instead (still computed once per jit).
+
+All tables are returned as split real/imag ``float32`` planes because Pallas
+TPU kernels have no native complex dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+__all__ = [
+    "dft_matrix",
+    "twiddle_grid",
+    "stage_twiddle",
+    "traced_twiddle",
+    "rfft_recomb_twiddle",
+]
+
+
+@functools.lru_cache(maxsize=256)
+def _dft_matrix_np(n: int, inverse: bool) -> tuple[np.ndarray, np.ndarray]:
+    """(n, n) DFT matrix W[j, k] = exp(∓2πi·j·k/n), float64 → float32 planes."""
+    j = np.arange(n, dtype=np.float64)
+    # Reduce j*k mod n in integer arithmetic first: keeps the argument of
+    # sin/cos small so float64 → float32 rounding stays at the ulp level even
+    # for n = 2**20 (j*k up to ~1e12 would lose precision otherwise).
+    jk = np.outer(np.arange(n, dtype=np.int64), np.arange(n, dtype=np.int64)) % n
+    ang = (2.0 * np.pi / n) * jk.astype(np.float64)
+    sign = 1.0 if inverse else -1.0
+    return (
+        np.cos(ang).astype(np.float32),
+        (sign * np.sin(ang)).astype(np.float32),
+    )
+
+
+def dft_matrix(n: int, inverse: bool = False) -> tuple[np.ndarray, np.ndarray]:
+    """Cached (n, n) DFT matrix as (real, imag) float32 planes."""
+    if n <= 0 or n & (n - 1):
+        raise ValueError(f"DFT matrix size must be a power of two, got {n}")
+    return _dft_matrix_np(n, inverse)
+
+
+@functools.lru_cache(maxsize=256)
+def _twiddle_grid_np(
+    n1: int, n2: int, inverse: bool
+) -> tuple[np.ndarray, np.ndarray]:
+    n = n1 * n2
+    k1 = np.arange(n1, dtype=np.int64)[:, None]
+    m2 = np.arange(n2, dtype=np.int64)[None, :]
+    ang = (2.0 * np.pi / n) * ((k1 * m2) % n).astype(np.float64)
+    sign = 1.0 if inverse else -1.0
+    return (
+        np.cos(ang).astype(np.float32),
+        (sign * np.sin(ang)).astype(np.float32),
+    )
+
+
+def twiddle_grid(
+    n1: int, n2: int, inverse: bool = False
+) -> tuple[np.ndarray, np.ndarray]:
+    """Four-step inter-factor twiddle T[k1, m2] = exp(∓2πi·k1·m2/(n1·n2))."""
+    return _twiddle_grid_np(n1, n2, inverse)
+
+
+@functools.lru_cache(maxsize=512)
+def stage_twiddle(l: int, inverse: bool = False) -> tuple[np.ndarray, np.ndarray]:
+    """Stockham stage twiddle w[j] = exp(∓πi·j/l), j ∈ [0, l) — radix-2."""
+    ang = (np.pi / l) * np.arange(l, dtype=np.float64)
+    sign = 1.0 if inverse else -1.0
+    return (
+        np.cos(ang).astype(np.float32),
+        (sign * np.sin(ang)).astype(np.float32),
+    )
+
+
+def traced_twiddle(n1: int, n2: int, inverse: bool = False):
+    """On-device twiddle grid for sizes too large to embed as constants.
+
+    Uses broadcasted iota + mod-n reduction in int32 so the trig argument is
+    exact; returns (real, imag) float32 planes of shape (n1, n2).
+    """
+    import jax.numpy as jnp
+
+    n = n1 * n2
+    k1 = jnp.arange(n1, dtype=jnp.int64 if n > 2**31 else jnp.int32)[:, None]
+    m2 = jnp.arange(n2, dtype=k1.dtype)[None, :]
+    red = ((k1 * m2) % n).astype(jnp.float32)
+    ang = (2.0 * np.pi / n) * red
+    sign = 1.0 if inverse else -1.0
+    return jnp.cos(ang), sign * jnp.sin(ang)
+
+
+@functools.lru_cache(maxsize=128)
+def rfft_recomb_twiddle(n: int, inverse: bool = False):
+    """Recombination twiddles for real-FFT even/odd packing.
+
+    For rfft of a length-``n`` real signal computed via a length-``n/2``
+    complex FFT: X[k] = E[k] + e^{∓2πik/n}·O[k].  Returns the unit phasor
+    e^{∓2πik/n} for k ∈ [0, n/2] as float32 planes (length n//2 + 1).
+    """
+    k = np.arange(n // 2 + 1, dtype=np.float64)
+    ang = (2.0 * np.pi / n) * k
+    sign = 1.0 if inverse else -1.0
+    return (
+        np.cos(ang).astype(np.float32),
+        (sign * np.sin(ang)).astype(np.float32),
+    )

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (the FFT itself).
+
+dft_matmul  direct DFT GEMM (N <= 1024, paper's 1-call regime)
+fft4step    fused four-step (N <= 65536, one HBM round trip)
+ops         jit wrappers + plan-driven recursion (2-/3-call regimes)
+ref         oracles (naive float64 DFT, jnp.fft, four-step reference)
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.dft_matmul import dft_matmul_call
+from repro.kernels.fft4step import fft4step_call
+
+__all__ = ["ops", "ref", "dft_matmul_call", "fft4step_call"]

@@ -1,0 +1,214 @@
+"""Sharding trees for train/serve state — what the dry-run lowers against.
+
+Builds NamedSharding pytrees for: parameters (from logical axes), optimizer
+state (AdamW moments mirror params; Adafactor's factored stats drop the
+corresponding dims), gradient-compression error state, batches, and
+decode caches (rule-based per cache type, with SP fallback for long-context
+KV when the batch axis can't be sharded)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig, TrainConfig
+from repro.models import model as model_lib
+from repro.models.layers.attention import KVCache
+from repro.models.layers.spectral import SpectralCache
+from repro.models.layers.ssm import SSMCache
+from repro.models.layers.xlstm import MLSTMCache, SLSTMCache
+from repro.sharding.partition import spec_for_shape
+from repro.train.optimizer import OptState
+from repro.train.train_loop import TrainState, init_train_state
+from repro.utils.params import unzip
+
+__all__ = [
+    "abstract_params",
+    "param_count",
+    "train_state_shardings",
+    "abstract_train_state",
+    "batch_shardings",
+    "cache_shardings",
+    "replicated",
+]
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: _ns(mesh, P()), tree)
+
+
+@functools.lru_cache(maxsize=32)
+def _abstract_cached(cfg: ModelConfig):
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    ptree = jax.eval_shape(
+        lambda k: model_lib.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    return unzip(ptree)
+
+
+def abstract_params(cfg: ModelConfig):
+    """(values_SDS, axes) without allocating anything."""
+    return _abstract_cached(cfg)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    values, _ = abstract_params(cfg)
+    return sum(int(x.size) for x in jax.tree.leaves(values))
+
+
+def _param_spec_tree(cfg, mesh, par):
+    values, axes = abstract_params(cfg)
+    return jax.tree.map(
+        lambda ax, v: spec_for_shape(tuple(ax), tuple(v.shape), mesh, par),
+        axes,
+        values,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def _opt_spec_tree(cfg, train_cfg, mesh, par):
+    values, axes = abstract_params(cfg)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    if train_cfg.optimizer == "sgd":
+        return ()
+    if train_cfg.optimizer == "adamw":
+        # optimizer.inner = {"m": <params tree>, "v": <params tree>}
+        pspecs = _param_spec_tree(cfg, mesh, par)
+        return {"m": pspecs, "v": pspecs}
+
+    # adafactor: per-leaf {"vr","vc"} (factored) or {"v"}.
+    def leaf_axes(ax, v):
+        ax = tuple(ax)
+        shape = tuple(v.shape)
+        if len(shape) >= 2:
+            return {
+                "vr": spec_for_shape(ax[:-1], shape[:-1], mesh, par),
+                "vc": spec_for_shape(ax[:-2] + ax[-1:], shape[:-2] + shape[-1:], mesh, par),
+            }
+        return {"v": spec_for_shape(ax, shape, mesh, par)}
+
+    return jax.tree.map(leaf_axes, axes, values, is_leaf=is_axes)
+
+
+def abstract_train_state(cfg, train_cfg) -> TrainState:
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, train_cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+def train_state_shardings(cfg, train_cfg, mesh: Mesh, par: ParallelConfig) -> TrainState:
+    pspecs = _param_spec_tree(cfg, mesh, par)
+    to_ns = lambda tree: jax.tree.map(
+        lambda s: _ns(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    params_sh = to_ns(pspecs)
+    opt_sh = OptState(step=_ns(mesh, P()), inner=to_ns(_opt_spec_tree(cfg, train_cfg, mesh, par)))
+    err_sh = params_sh if train_cfg.grad_compression else ()
+    return TrainState(
+        step=_ns(mesh, P()), params=params_sh, opt_state=opt_sh, err_state=err_sh
+    )
+
+
+def batch_shardings(cfg, shape: ShapeConfig, mesh: Mesh, par: ParallelConfig, batch_tree):
+    """Batch dim over ('pod','data') where divisible; trailing dims replicated
+    (seq stays unsharded for train — activations re-shard internally)."""
+    rules_batch = (par.pod_axis, par.data_axis) if par.pod_axis else (par.data_axis,)
+
+    def one(x):
+        if x.ndim == 0:
+            return _ns(mesh, P())
+        axes = ("batch",) + (None,) * (x.ndim - 1)
+        return _ns(mesh, spec_for_shape(axes, tuple(x.shape), mesh, par))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def _axis_size(mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        return mesh.shape[names]
+    import numpy as np
+
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def cache_shardings(cfg, mesh: Mesh, par: ParallelConfig, caches_sds):
+    """Decode-cache shardings.  Batch over data axes when divisible; long
+    sequence axes fall back to SP over (data[, model]); heads over model."""
+    batch_axes = (par.pod_axis, par.data_axis) if par.pod_axis else (par.data_axis,)
+    batch_axes = tuple(a for a in batch_axes if a)
+    model_ax = par.model_axis
+
+    def div(n, names):
+        return n % _axis_size(mesh, names) == 0
+
+    def kv_spec(leaf):
+        if len(leaf.shape) == 4:  # int8 scale planes (R, B, S, KV)
+            r, b, s, kv = leaf.shape
+            b_sh = batch_axes if div(b, batch_axes) else None
+            if kv % mesh.shape[model_ax] == 0:
+                return P(None, b_sh, None, model_ax)
+            return P(None, b_sh, None, None)
+        r, b, s, kv, hd = leaf.shape
+        b_sh = batch_axes if div(b, batch_axes) else None
+        used_data = b_sh is not None
+        if kv % mesh.shape[model_ax] == 0:
+            return P(None, b_sh, None, model_ax, None)
+        # Preferred fallback: shard head_dim over model — the decode
+        # dynamic-update-slice stays local (writing one slot of a
+        # *seq*-sharded cache forces SPMD to rematerialise the whole cache
+        # every layer: measured 142 GB/chip/step on yi-6b decode_32k) and
+        # the score/PV reductions over hd are small all-reduces.
+        if used_data and hd % mesh.shape[model_ax] == 0:
+            return P(None, b_sh, None, None, model_ax)
+        # Last resort (e.g. batch=1 long-context): SP over the seq axis.
+        seq_axes = (model_ax,) if used_data else batch_axes + (model_ax,)
+        seq_axes = tuple(a for a in seq_axes if a)
+        while seq_axes and not div(s, seq_axes):
+            seq_axes = seq_axes[1:]
+        if seq_axes:
+            return P(None, b_sh, seq_axes if len(seq_axes) > 1 else seq_axes[0], None, None)
+        return P(None, b_sh, None, None, None)
+
+    def generic_spec(leaf):
+        # (R, B, ...) recurrent states: batch over data, widest trailing dim
+        # over model when divisible.
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        if len(shape) == 1:
+            return P(None)
+        b_sh = batch_axes if div(shape[1], batch_axes) else None
+        entries = [None, b_sh] + [None] * (len(shape) - 2)
+        # pick the largest trailing dim divisible by the model axis
+        best, best_dim = None, 0
+        for i in range(2, len(shape)):
+            if shape[i] % mesh.shape[model_ax] == 0 and shape[i] > best_dim:
+                best, best_dim = i, shape[i]
+        if best is not None:
+            entries[best] = model_ax
+        return P(*entries)
+
+    def one(path, leaf):
+        if not hasattr(leaf, "shape"):
+            return _ns(mesh, P())
+        names = {getattr(p, "name", None) for p in path}
+        if names & {"k", "v", "k_scale", "v_scale"}:
+            return _ns(mesh, kv_spec(leaf))
+        return _ns(mesh, generic_spec(leaf))
+
+    return jax.tree_util.tree_map_with_path(one, caches_sds)

@@ -1,0 +1,200 @@
+"""Residual blocks: one mixer (+ MLP where the family uses one) per kind.
+
+Kinds
+-----
+attn          pre-norm global attention + pre-norm MLP
+attn_local    same, sliding-window (cfg.sliding_window)
+moe           pre-norm attention + pre-norm MoE FFN
+mamba2        pre-norm Mamba2 (self-contained, no MLP)
+mlstm         pre-norm mLSTM (self-contained, no MLP)
+slstm         pre-norm sLSTM + pre-norm MLP
+shared_attn   structurally == attn; the stack shares its params
+spectral      pre-norm FFT long-conv mixer + pre-norm MLP
+
+All forwards return ``(x, cache_or_None, aux_loss)``; decodes return
+``(x, new_cache)``.  Caches are NamedTuples from the layer modules.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import spectral as spec_lib
+from repro.models.layers import ssm as ssm_lib
+from repro.models.layers import xlstm as xlstm_lib
+from repro.models.layers.mlp import mlp_apply, mlp_init
+from repro.models.layers.moe import moe_apply, moe_init
+from repro.models.layers.norms import rms_norm, rms_norm_init
+
+__all__ = [
+    "block_init",
+    "block_forward",
+    "block_decode",
+    "block_cache_init",
+    "ATTN_KINDS",
+]
+
+ATTN_KINDS = ("attn", "attn_local", "moe", "shared_attn")
+
+
+def _ff_dim(cfg) -> int:
+    return cfg.d_ff if cfg.d_ff > 0 else 2 * cfg.d_model
+
+
+def block_init(key, kind: str, cfg, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn", "attn_local", "shared_attn"):
+        return {
+            "norm1": rms_norm_init(d),
+            "mixer": attn_lib.attn_init(k1, cfg, dtype),
+            "norm2": rms_norm_init(d),
+            "mlp": mlp_init(k2, d, _ff_dim(cfg), dtype, act=cfg.act),
+        }
+    if kind == "moe":
+        return {
+            "norm1": rms_norm_init(d),
+            "mixer": attn_lib.attn_init(k1, cfg, dtype),
+            "norm2": rms_norm_init(d),
+            "moe": moe_init(k2, cfg, dtype),
+        }
+    if kind == "mamba2":
+        return {"norm1": rms_norm_init(d), "mixer": ssm_lib.mamba2_init(k1, cfg, dtype)}
+    if kind == "mlstm":
+        return {"norm1": rms_norm_init(d), "mixer": xlstm_lib.mlstm_init(k1, cfg, dtype)}
+    if kind == "slstm":
+        return {
+            "norm1": rms_norm_init(d),
+            "mixer": xlstm_lib.slstm_init(k1, cfg, dtype),
+            "norm2": rms_norm_init(d),
+            "mlp": mlp_init(k2, d, _ff_dim(cfg), dtype, act=cfg.act),
+        }
+    if kind == "spectral":
+        return {
+            "norm1": rms_norm_init(d),
+            "mixer": spec_lib.spectral_init(k1, cfg, dtype),
+            "norm2": rms_norm_init(d),
+            "mlp": mlp_init(k2, d, _ff_dim(cfg), dtype, act=cfg.act),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _window(kind, cfg) -> Optional[int]:
+    return cfg.sliding_window if kind == "attn_local" else None
+
+
+def block_forward(
+    params,
+    x,
+    *,
+    kind: str,
+    cfg,
+    positions,
+    mrope_positions=None,
+    return_cache: bool = False,
+):
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = rms_norm(params["norm1"], x, eps=cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        res = attn_lib.attn_forward(
+            params["mixer"],
+            h,
+            cfg=cfg,
+            positions=positions,
+            window=_window(kind, cfg),
+            mrope_positions=mrope_positions,
+            return_cache=return_cache,
+        )
+        if return_cache:
+            res, cache = res
+        x = x + res
+        h2 = rms_norm(params["norm2"], x, eps=cfg.norm_eps)
+        if kind == "moe":
+            y, aux = moe_apply(params["moe"], h2, cfg=cfg)
+        else:
+            y = mlp_apply(params["mlp"], h2, act=cfg.act)
+        return x + y, cache, aux
+    if kind == "mamba2":
+        res = ssm_lib.mamba2_forward(params["mixer"], h, cfg=cfg, return_cache=return_cache)
+        if return_cache:
+            res, cache = res
+        return x + res, cache, aux
+    if kind == "mlstm":
+        res = xlstm_lib.mlstm_forward(params["mixer"], h, cfg=cfg, return_cache=return_cache)
+        if return_cache:
+            res, cache = res
+        return x + res, cache, aux
+    if kind == "slstm":
+        res = xlstm_lib.slstm_forward(params["mixer"], h, cfg=cfg, return_cache=return_cache)
+        if return_cache:
+            res, cache = res
+        x = x + res
+        h2 = rms_norm(params["norm2"], x, eps=cfg.norm_eps)
+        return x + mlp_apply(params["mlp"], h2, act=cfg.act), cache, aux
+    if kind == "spectral":
+        res = spec_lib.spectral_forward(params["mixer"], h, cfg=cfg, return_cache=return_cache)
+        if return_cache:
+            res, cache = res
+        x = x + res
+        h2 = rms_norm(params["norm2"], x, eps=cfg.norm_eps)
+        return x + mlp_apply(params["mlp"], h2, act=cfg.act), cache, aux
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def block_cache_init(kind: str, cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if kind in ATTN_KINDS:
+        return attn_lib.init_kv_cache(
+            cfg, batch, max_len, window=_window(kind, cfg), dtype=dtype
+        )
+    if kind == "mamba2":
+        return ssm_lib.init_ssm_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm_lib.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm_lib.init_slstm_cache(cfg, batch, dtype)
+    if kind == "spectral":
+        return spec_lib.init_spectral_cache(cfg, batch, dtype)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def block_decode(params, x, cache, t, *, kind: str, cfg, mrope_positions=None):
+    h = rms_norm(params["norm1"], x, eps=cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        res, cache = attn_lib.attn_decode(
+            params["mixer"],
+            h,
+            cache,
+            t,
+            cfg=cfg,
+            window=_window(kind, cfg),
+            mrope_positions=mrope_positions,
+        )
+        x = x + res
+        h2 = rms_norm(params["norm2"], x, eps=cfg.norm_eps)
+        if kind == "moe":
+            y, _ = moe_apply(params["moe"], h2, cfg=cfg)
+        else:
+            y = mlp_apply(params["mlp"], h2, act=cfg.act)
+        return x + y, cache
+    if kind == "mamba2":
+        res, cache = ssm_lib.mamba2_decode(params["mixer"], h, cache, cfg=cfg)
+        return x + res, cache
+    if kind == "mlstm":
+        res, cache = xlstm_lib.mlstm_decode(params["mixer"], h, cache, cfg=cfg)
+        return x + res, cache
+    if kind == "slstm":
+        res, cache = xlstm_lib.slstm_decode(params["mixer"], h, cache, cfg=cfg)
+        x = x + res
+        h2 = rms_norm(params["norm2"], x, eps=cfg.norm_eps)
+        return x + mlp_apply(params["mlp"], h2, act=cfg.act), cache
+    if kind == "spectral":
+        res, cache = spec_lib.spectral_decode(params["mixer"], h, cache, cfg=cfg)
+        x = x + res
+        h2 = rms_norm(params["norm2"], x, eps=cfg.norm_eps)
+        return x + mlp_apply(params["mlp"], h2, act=cfg.act), cache
+    raise ValueError(f"unknown block kind {kind!r}")

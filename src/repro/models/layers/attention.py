@@ -1,0 +1,326 @@
+"""GQA attention: full, chunked (long-context), sliding-window, decode.
+
+Modes
+-----
+* ``attn_forward``  — train/prefill.  Exact causal attention; above
+  ``cfg.attn_chunk_threshold`` query positions it switches to a q-block scan
+  (bounded score memory, exact softmax per block).  Sliding-window layers
+  restrict each q block to its KV band (gathered with a dynamic slice, so
+  compute and memory scale with the window, not the sequence).
+* ``attn_decode``   — single-token step against a KV cache.  Global layers
+  keep the full cache; sliding-window layers keep a ring buffer of
+  ``window`` slots (keys stored pre-rotated at absolute positions).
+
+GQA K/V are *expanded to the full head count* before the score einsums
+(broadcast, not copy, until XLA materialises it): with kv_heads as small as
+4 and a 16-way tensor axis, the grouped (B, KV, G, Sq, Sk) form leaves the
+score tensor replicated over the model axis — at train_4k that is a >30 GB
+per-chip tensor.  The expanded (B, H, Sq, Sk) form shards cleanly on heads.
+The KV *cache* stays in compact kv_heads form.  Logit softcap (gemma-style)
+where configured; softmax always float32.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rope as rope_lib
+from repro.sharding.logical import ann
+from repro.utils.params import normal
+
+__all__ = ["attn_init", "attn_forward", "attn_decode", "init_kv_cache", "KVCache"]
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Decode KV cache; optionally int8-quantized (per-slot, per-kv-head).
+
+    k/v: (B, S_slots, KV, hd) — bf16, or int8 with k_scale/v_scale
+    (B, S_slots, KV) float32 absmax scales.  int8 halves the dominant
+    memory term of the big decode cells (qwen2-vl-72b's 1.4 TB cache) and
+    turns the score/PV contractions into int8 MXU dots.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: Optional[jax.Array] = None
+    v_scale: Optional[jax.Array] = None
+
+
+def _quant_tok(x):
+    """x: (B, S, KV, hd) → int8 + per-(B,S,KV) absmax scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) + 1e-9
+    scale = amax / 127.0
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def attn_init(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": normal(ks[0], (D, H, hd), ("embed", "heads", "head_dim"), dtype=dtype),
+        "wk": normal(ks[1], (D, KV, hd), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wv": normal(ks[2], (D, KV, hd), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wo": normal(
+            ks[3],
+            (H, hd, D),
+            ("heads", "head_dim", "embed"),
+            scale=(H * hd) ** -0.5,
+            dtype=dtype,
+        ),
+    }
+
+
+def _qkv(params, x, cfg, positions, mrope_positions):
+    """Project + rotate.  x: (B, S, D) → q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
+    k = jnp.einsum("bsd,dnk->bsnk", x, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dnk->bsnk", x, params["wv"].astype(cd))
+    q = ann(q, "batch", "seq", "heads", "head_dim")
+    k = ann(k, "batch", "seq", "kv_heads", "head_dim")
+    v = ann(v, "batch", "seq", "kv_heads", "head_dim")
+    if cfg.rope_kind == "mrope" and mrope_positions is not None:
+        q = rope_lib.apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = rope_lib.apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = rope_lib.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(x, g: int):
+    """(B, S, KV, hd) → (B, S, KV·g, hd), annotated to shard on heads."""
+    if g == 1:
+        return ann(x, "batch", "seq", "heads", "head_dim")
+    b, s, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, g, hd))
+    x = x.reshape(b, s, kv * g, hd)
+    return ann(x, "batch", "seq", "heads", "head_dim")
+
+
+def _attend(q, k_full, v_full, cfg, mask):
+    """q: (B,Sq,H,hd); k/v already head-expanded: (B,Sk,H,hd).
+
+    mask: (Sq, Sk) bool.  Returns (B,Sq,H,hd).
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k_full).astype(jnp.float32)
+    scores = scores * (hd**-0.5)
+    if cfg.attn_logit_softcap:
+        cap = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / cap) * cap
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    scores = ann(scores, "batch", "heads", None, None)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v_full.dtype), v_full)
+    return ann(out, "batch", "seq", "heads", "head_dim")
+
+
+def attn_forward(
+    params,
+    x,
+    *,
+    cfg,
+    positions,
+    window: Optional[int] = None,
+    mrope_positions=None,
+    return_cache: bool = False,
+):
+    """Causal (optionally banded) attention over a full sequence."""
+    b, s, d = x.shape
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    g = h // kv
+    q, k, v = _qkv(params, x, cfg, positions, mrope_positions)
+
+    if s <= cfg.attn_chunk_threshold:
+        pos = positions[0]
+        mask = pos[None, :] <= pos[:, None]
+        if window:
+            mask &= pos[None, :] > (pos[:, None] - window)
+        out = _attend(q, _expand_kv(k, g), _expand_kv(v, g), cfg, mask)
+    else:
+        out = _chunked_attention(q, k, v, cfg, window, g)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    y = ann(y, "batch", "seq", "embed")
+    if return_cache:
+        return y, KVCache(k=k, v=v)
+    return y
+
+
+def _chunked_attention(q, k, v, cfg, window, g):
+    """Exact attention via a scan over q blocks (bounded score memory).
+
+    For sliding-window layers only the KV band [blk·C − w, blk·C + C) is
+    gathered per block, so both score memory and FLOPs scale with the
+    window — the banded-SWA path that makes the long-context cells
+    sub-quadratic.
+    """
+    b, s, h, hd = q.shape
+    c = cfg.attn_chunk
+    pad = (-s) % c
+    if pad:
+        # Pad to a whole number of q blocks; padded keys sit at positions
+        # ≥ s so the causal mask excludes them from every real query row,
+        # and padded query rows are sliced off below.
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = s + pad
+    nblk = s_pad // c
+    banded = window is not None and window < s_pad
+    band = None
+    if banded:
+        band = ((window + c - 1) // c + 1) * c  # KV band width, chunk-aligned
+
+    k_full = _expand_kv(k, g)
+    v_full = _expand_kv(v, g)
+
+    # checkpoint the chunk body: without it, differentiating the scan saves
+    # every chunk's (B, H, C, S) float32 probs — ~1 GB × chunks × layers on
+    # the 72B train cell (measured 267 GB of temp).  Flash-attention-style
+    # recompute instead.
+    @jax.checkpoint
+    def body(_, blk):
+        start = blk * c
+        qc = jax.lax.dynamic_slice_in_dim(q, start, c, axis=1)
+        q_pos = start + jnp.arange(c)
+        if banded:
+            k_start = jnp.maximum(start + c - band, 0)
+            kc = jax.lax.dynamic_slice_in_dim(k_full, k_start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v_full, k_start, band, axis=1)
+            k_pos = k_start + jnp.arange(band)
+        else:
+            kc, vc = k_full, v_full
+            k_pos = jnp.arange(s_pad)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        return None, _attend(qc, kc, vc, cfg, mask)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nblk))
+    # outs: (nblk, B, C, H, hd) → (B, S_pad, H, hd) → drop padded rows
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s_pad, h, hd)
+    return out[:, :s]
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg, batch, max_len, *, window: Optional[int] = None, dtype=jnp.bfloat16):
+    slots = min(window, max_len) if window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (batch, slots, kv, hd)
+    if getattr(cfg, "kv_cache_dtype", "bf16") == "int8":
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8),
+            v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:3], jnp.float32),
+            v_scale=jnp.zeros(shape[:3], jnp.float32),
+        )
+    # distinct buffers so cache donation never aliases k and v
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attn_decode(
+    params,
+    x,
+    cache: KVCache,
+    t,
+    *,
+    cfg,
+    window: Optional[int] = None,
+    mrope_positions=None,
+):
+    """One decode step.  x: (B, 1, D); t: scalar int32 current position.
+
+    Returns (y, new_cache).  Sliding-window layers use a ring buffer of
+    ``window`` slots (t mod window); keys are stored already rotated at
+    their absolute position so lookups are position-independent.
+    """
+    b, _, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    positions = jnp.full((b, 1), t, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(params, x, cfg, positions, mrope_positions)
+
+    slots = cache.k.shape[1]
+    slot = (t % slots) if window else t
+    quantized = cache.k.dtype == jnp.int8
+    # No explicit sharding annotation here: the cache arrives with the
+    # launcher-chosen sharding (e.g. seq over ('data','model') for long
+    # contexts) and the update must inherit it — a fixed kv_seq constraint
+    # forces SPMD into a full rematerialisation of the cache (measured:
+    # +17 GB temp on gemma3 long_500k).
+    if quantized:
+        kq_new, ks_new = _quant_tok(k_new)
+        vq_new, vs_new = _quant_tok(v_new)
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, kq_new, slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, vq_new, slot, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks_new, slot, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs_new, slot, axis=1)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+        k_scale = v_scale = None
+
+    # Grouped read against the compact cache: q (B,KV,G,hd).  The query is
+    # tiny (one token) — pin it to batch-only sharding so the contraction
+    # happens in the *cache's* layout.  Leaving q heads-sharded makes SPMD
+    # all-to-all the entire seq-sharded KV cache into head-sharded layout
+    # every layer (measured 142 GB/chip/step on yi-6b decode_32k).
+    qg = ann(q.reshape(b, kv, g, hd), "batch", None, None, None)
+    if quantized:
+        # int8 × int8 MXU dot; scales folded back per (b, kv[, slot]).
+        q_amax = jnp.max(jnp.abs(qg.astype(jnp.float32)), axis=-1) + 1e-9
+        q_s = q_amax / 127.0  # (B,KV,G)
+        q_q = jnp.clip(
+            jnp.round(qg.astype(jnp.float32) / q_s[..., None]), -127, 127
+        ).astype(jnp.int8)
+        scores = jnp.einsum(
+            "bngh,bknh->bngk", q_q, k, preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+        ks_t = jnp.swapaxes(k_scale, 1, 2)  # (B,KV,S)
+        scores = scores * q_s[..., None] * ks_t[:, :, None, :]
+    else:
+        scores = jnp.einsum("bngh,bknh->bngk", qg, k).astype(jnp.float32)
+    scores = scores * (hd**-0.5)
+    if cfg.attn_logit_softcap:
+        cap = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / cap) * cap
+    slot_idx = jnp.arange(slots)
+    if window:
+        # Ring buffer: once t >= slots every slot holds a live key.
+        valid = slot_idx <= jnp.minimum(t, slots - 1)
+    else:
+        valid = slot_idx <= t
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if quantized:
+        # Fold the per-slot v scale into the probs *before* quantising them
+        # (the scale rides the contracted axis), then int8 × int8 again.
+        vs_t = jnp.swapaxes(v_scale, 1, 2)  # (B,KV,S)
+        pv = probs * vs_t[:, :, None, :]
+        pv_amax = jnp.max(jnp.abs(pv), axis=-1) + 1e-12
+        pv_s = pv_amax / 127.0
+        pv_q = jnp.clip(jnp.round(pv / pv_s[..., None]), -127, 127).astype(jnp.int8)
+        out = jnp.einsum(
+            "bngk,bknh->bngh", pv_q, v, preferred_element_type=jnp.int32
+        ).astype(jnp.float32) * pv_s[..., None]
+        out = out.astype(x.dtype)
+    else:
+        out = jnp.einsum("bngk,bknh->bngh", probs.astype(v.dtype), v)
+    out = out.reshape(b, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, KVCache(k=k, v=v, k_scale=k_scale, v_scale=v_scale)

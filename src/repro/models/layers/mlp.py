@@ -1,0 +1,38 @@
+"""Gated MLP (SwiGLU / GeGLU) and the plain variant."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.logical import ann
+from repro.utils.params import normal
+
+__all__ = ["mlp_init", "mlp_apply"]
+
+_ACT = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, *, act: str = "silu") -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": normal(ks[0], (d_model, d_ff), ("embed", "ff"), dtype=dtype),
+        "wi_up": normal(ks[1], (d_model, d_ff), ("embed", "ff"), dtype=dtype),
+        "wo": normal(
+            ks[2], (d_ff, d_model), ("ff", "embed"), scale=d_ff**-0.5, dtype=dtype
+        ),
+    }
+
+
+def mlp_apply(params, x, *, act: str = "silu"):
+    cd = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, params["wi_gate"].astype(cd))
+    u = jnp.einsum("bsd,df->bsf", x, params["wi_up"].astype(cd))
+    h = _ACT[act](g) * u
+    h = ann(h, "batch", "seq", "ff")
+    y = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(cd))
+    return ann(y, "batch", "seq", "embed")

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts layer: top-k routing, shared experts, dense residual.
+
+Covers both assigned MoE archs:
+  * arctic-480b       — 128 experts, top-2, plus a *dense residual* MLP in
+                        parallel with the MoE branch;
+  * deepseek-moe-16b  — 64 fine-grained routed experts, top-6, plus 2
+                        *shared* experts that every token passes through.
+
+Dispatch is sort-free scatter/gather ("megablocks-lite"): tokens are placed
+into per-expert capacity slots via a cumsum-over-one-hot position assignment
+(slots are unique by construction, so a single scatter suffices), expert
+FFNs run as one batched einsum over stacked (E, D, F) weights — which shards
+cleanly over the 'experts'/'model' mesh axis (EP) — and results are gathered
+back with the normalised top-k router weights.  Overflow tokens are dropped
+(standard capacity-factor semantics); the router aux loss (load balancing,
+Switch-style) is returned for the training loop.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.mlp import _ACT, mlp_init, mlp_apply
+from repro.sharding.logical import ann, data_shard_count
+from repro.utils.params import normal
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": normal(ks[0], (D, E), ("embed", "experts"), scale=0.02, dtype=jnp.float32),
+        "wi_gate": normal(ks[1], (E, D, F), ("experts", "embed", "expert_ff"), scale=D**-0.5, dtype=dtype),
+        "wi_up": normal(ks[2], (E, D, F), ("experts", "embed", "expert_ff"), scale=D**-0.5, dtype=dtype),
+        "wo": normal(ks[3], (E, F, D), ("experts", "expert_ff", "embed"), scale=F**-0.5, dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], D, F * cfg.num_shared_experts, dtype, act=cfg.act)
+    if cfg.moe_dense_residual:
+        p["dense"] = mlp_init(ks[5], D, F, dtype, act=cfg.act)
+    return p
+
+
+def _capacity(tokens: int, cfg) -> int:
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, (cap + 7) // 8 * 8)  # sublane-aligned
+
+
+def moe_apply(params, x, *, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (y, aux_loss).
+
+    Group-local dispatch (§Perf hillclimb 3): tokens are viewed as
+    (G, T/G, ·) with G = the mesh's data-shard count, and *all* routing
+    bookkeeping (cumsum position assignment, capacity, scatter, gather) is
+    per-group — i.e. local to one data shard.  The only cross-shard traffic
+    is the (E, G·C_g, D) buffer re-sharding from group-sharded to
+    expert-sharded around the expert GEMMs (a true all-to-all of the token
+    payload).  The previous global-cumsum form made SPMD materialise a
+    full-size partial expert buffer per shard and all-reduce it — measured
+    995 GB/chip/step of all-reduce on deepseek train_4k.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cd = x.dtype
+    t = b * s
+    ng = data_shard_count()
+    if t % ng:
+        ng = 1  # tiny test batches: fall back to one group
+    tl = t // ng
+    cg = _capacity(tl, cfg)  # per-group expert capacity
+
+    xt = ann(x.reshape(ng, tl, d), "batch", None, "embed")
+
+    # --- routing (float32 for a stable softmax), group-local -------------
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), params["router"])
+    logits = ann(logits, "batch", None, "experts")
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Tl, E)
+    weights, idx = jax.lax.top_k(probs, k)  # (G, Tl, k)
+    weights = weights / (weights.sum(-1, keepdims=True) + 1e-9)
+
+    # --- per-group capacity slots via local cumsum ------------------------
+    flat_e = idx.reshape(ng, tl * k)  # (G, Tl·k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (G, Tl·k, E)
+    pos = (jnp.cumsum(onehot, axis=1) - 1) * onehot  # local prefix per group
+    pos = pos.sum(-1)  # (G, Tl·k)
+    keep = pos < cg
+    slot = flat_e * cg + jnp.minimum(pos, cg - 1)  # within-group slot
+
+    # --- group-local scatter to (G, E·C_g, D) ------------------------------
+    tok_idx = jnp.tile(jnp.repeat(jnp.arange(tl), k)[None], (ng, 1))
+    contrib = jnp.take_along_axis(xt, tok_idx[..., None], axis=1).astype(cd)
+    contrib = contrib * keep[..., None].astype(cd)
+
+    def scatter_one(c_, s_):
+        return jnp.zeros((e * cg, d), cd).at[s_].add(c_)
+
+    buf = jax.vmap(scatter_one)(contrib, slot)  # (G, E·C_g, D), group-local
+    buf = ann(buf, "batch", None, "embed")
+    # (G, E, C_g, D) → (E, G·C_g, D): the honest expert-parallel all-to-all.
+    h = jnp.swapaxes(buf.reshape(ng, e, cg, d), 0, 1).reshape(e, ng * cg, d)
+    h = ann(h, "experts", None, "embed")
+
+    # --- batched expert FFN (shards over 'experts' = EP) ----------------
+    g = jnp.einsum("ecd,edf->ecf", h, params["wi_gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", h, params["wi_up"].astype(cd))
+    act = _ACT[cfg.act](g) * u
+    act = ann(act, "experts", None, "expert_ff")
+    y_e = jnp.einsum("ecf,efd->ecd", act, params["wo"].astype(cd))
+
+    # --- back to group-sharded layout (all-to-all #2), local gather ------
+    y_g = jnp.swapaxes(y_e.reshape(e, ng, cg, d), 0, 1)  # (G, E, C_g, D)
+    y_g = ann(y_g.reshape(ng, e * cg, d), "batch", None, "embed")
+    y_tok = jnp.take_along_axis(y_g, slot[..., None], axis=1)  # (G, Tl·k, D)
+    w = (weights.reshape(ng, tl * k) * keep.astype(jnp.float32)).astype(cd)
+    y = (y_tok * w[..., None]).reshape(ng, tl, k, d).sum(axis=2)  # (G, Tl, D)
+    y = y.reshape(t, d)
+
+    # --- shared experts / dense residual ---------------------------------
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x, act=cfg.act).reshape(t, d)
+    if "dense" in params:
+        y = y + mlp_apply(params["dense"], x, act=cfg.act).reshape(t, d)
+
+    # --- Switch-style load-balance aux loss -------------------------------
+    me = probs.mean(axis=(0, 1))  # mean router prob per expert
+    ce = onehot.reshape(t, k, e).sum(1).astype(jnp.float32).mean(axis=0)
+    aux = (me * ce).sum() * e * cfg.router_aux_loss
+    y = ann(y.reshape(b, s, d), "batch", "seq", "embed")
+    return y, aux

@@ -1,0 +1,36 @@
+"""Normalisation layers (functional, dict-param style)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm_init", "rms_norm", "layer_norm_init", "layer_norm"]
+
+
+def rms_norm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params, x, *, eps: float = 1e-6):
+    # Variance in float32 (fuses into the reduce), but the scaling multiply
+    # stays in the compute dtype: materialising the full activation in f32
+    # costs 2× bytes per norm × 2 norms/layer × fwd+bwd — measured as the
+    # dominant temp-memory term on the 72B train cell.
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def layer_norm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params, x, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)

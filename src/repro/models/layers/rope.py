@@ -1,0 +1,69 @@
+"""Rotary position embeddings: standard (llama-style) and M-RoPE (qwen2-vl).
+
+Functional: callers pass integer position ids, we return rotated q/k.  For
+M-RoPE, ``positions`` has shape (B, 3, S) — (temporal, height, width) — and
+the rotary half-dim is partitioned into ``sections`` driven by the respective
+position component (text tokens supply t = h = w = sequence index).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["apply_rope", "apply_mrope", "rope_freqs"]
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    half = head_dim // 2
+    return (theta ** (-np.arange(0, half, dtype=np.float64) / half)).astype(
+        np.float32
+    )
+
+
+def _rotate(x, sin, cos):
+    # llama-style: split halves.
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, hd/2)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)  # (B, S, 1, hd/2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    return _rotate(x, sin, cos)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: Sequence[int],
+) -> jax.Array:
+    """M-RoPE: x (B, S, H, hd); positions (B, 3, S) for (t, h, w).
+
+    The half-dim frequency bands are partitioned into ``sections`` (summing
+    to hd/2); band i rotates by the position component assigned to it
+    (qwen2-vl assigns [t, h, w] in order).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (half,)
+    # Select which of the 3 position streams drives each frequency band.
+    comp = np.concatenate(
+        [np.full((s,), i, dtype=np.int32) for i, s in enumerate(sections)]
+    )
+    # (B, half, S): position component comp[f] drives frequency band f.
+    pos_sel = positions.astype(jnp.float32)[:, comp, :]
+    ang = jnp.swapaxes(pos_sel, 1, 2) * freqs  # (B, S, half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    return _rotate(x, sin, cos)

@@ -1,0 +1,104 @@
+"""Spectral mixer — the paper's FFT as an LM layer (Hyena-style long conv).
+
+Token mixing by causal convolution with a learned per-channel global filter,
+computed as rfft → pointwise → irfft through :mod:`repro.core` — i.e. every
+transform uses the paper's memory-optimized plan (fused Pallas kernels on
+TPU, four-step XLA elsewhere).  A multiplicative gate keeps it competitive
+as a drop-in replacement for attention in the ablation configs.
+
+Decode uses a ring buffer of the last ``filter_len`` inputs and computes the
+direct dot product (O(Lf) per token) — exactly equivalent to the FFT path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conv import fft_conv
+from repro.sharding.logical import ann
+from repro.utils.params import Param, normal
+
+__all__ = [
+    "spectral_init",
+    "spectral_forward",
+    "spectral_decode",
+    "init_spectral_cache",
+    "SpectralCache",
+]
+
+
+class SpectralCache(NamedTuple):
+    buf: jax.Array  # (B, Lf, D) ring buffer of recent inputs
+    t: jax.Array    # scalar step counter (for ring indexing)
+
+
+def spectral_init(key, cfg, dtype) -> dict:
+    D, Lf = cfg.d_model, cfg.spectral_filter_len
+    ks = jax.random.split(key, 4)
+    # Smooth decaying filter init: h[d, j] ~ N(0, 1/Lf) · exp(-j/τ_d).
+    j = np.arange(Lf, dtype=np.float32)
+    tau = np.logspace(1.0, np.log10(Lf), D, dtype=np.float32)
+    envelope = np.exp(-j[None, :] / tau[:, None])  # (D, Lf)
+    base = jax.random.normal(ks[0], (D, Lf), jnp.float32) * (Lf**-0.5)
+    return {
+        "filt": Param((base * envelope).astype(jnp.float32), ("embed", "filter")),
+        "w_gate": normal(ks[1], (D, D), ("embed", "ff"), dtype=dtype),
+        "w_in": normal(ks[2], (D, D), ("embed", "ff"), dtype=dtype),
+        "w_out": normal(ks[3], (D, D), ("ff", "embed"), dtype=dtype),
+    }
+
+
+def spectral_forward(params, x, *, cfg, return_cache: bool = False):
+    """x: (B, S, D) → (B, S, D) via gated FFT long convolution."""
+    b, s, d = x.shape
+    cd = x.dtype
+    u = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(cd))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["w_gate"].astype(cd)))
+    # channels-major for the length-axis FFT: (B, D, S)
+    uc = jnp.swapaxes(u, 1, 2).astype(jnp.float32)
+    y = fft_conv(uc, params["filt"])  # (B, D, S) causal
+    y = jnp.swapaxes(y, 1, 2).astype(cd) * g
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(cd))
+    out = ann(out, "batch", "seq", "embed")
+    if return_cache:
+        lf = cfg.spectral_filter_len
+        keep = min(lf, s)
+        pos = jnp.arange(s - keep, s)
+        buf = jnp.zeros((b, lf, d), jnp.float32)
+        # ring layout: buf[p % lf] = u[position p] (decode's convention).
+        buf = buf.at[:, pos % lf, :].set(u.astype(jnp.float32)[:, s - keep :, :])
+        return out, SpectralCache(buf=buf, t=jnp.asarray(s, jnp.int32))
+    return out
+
+
+def init_spectral_cache(cfg, batch, dtype=jnp.float32) -> SpectralCache:
+    return SpectralCache(
+        buf=jnp.zeros((batch, cfg.spectral_filter_len, cfg.d_model), jnp.float32),
+        t=jnp.asarray(0, jnp.int32),
+    )
+
+
+def spectral_decode(params, x, cache: SpectralCache, *, cfg) -> Tuple[jax.Array, SpectralCache]:
+    """One token.  Direct dot with the filter over the ring buffer."""
+    b, _, d = x.shape
+    lf = cfg.spectral_filter_len
+    cd = x.dtype
+    u = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(cd))[:, 0]  # (B,D)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["w_gate"].astype(cd)))[:, 0]
+    slot = cache.t % lf
+    buf = jax.lax.dynamic_update_slice_in_dim(
+        cache.buf, u.astype(jnp.float32)[:, None, :], slot, axis=1
+    )
+    # Filter tap j multiplies input from j steps ago = slot - j (mod Lf).
+    ages = (slot - jnp.arange(lf)) % lf  # index of the input j steps back
+    hist = jnp.take(buf, ages, axis=1)  # (B, Lf, D) newest-first
+    valid = jnp.arange(lf) <= jnp.minimum(cache.t, lf - 1)
+    hist = hist * valid[None, :, None]
+    y = jnp.einsum("blD,Dl->bD", hist, params["filt"])  # Σ_j h[d,j]·u[t-j,d]
+    y = (y.astype(cd) * g)[:, None, :]
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(cd))
+    return out, SpectralCache(buf=buf, t=cache.t + 1)

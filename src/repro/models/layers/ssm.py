@@ -1,0 +1,215 @@
+"""Mamba2 (SSD) block — chunked matmul form + O(1) decode state.
+
+Implements the state-space-duality block of Mamba2 (Dao & Gu 2024), as used
+by zamba2: input projection → short causal conv (width 4) → SSD scan with
+per-head scalar decay → gated RMSNorm → output projection.
+
+The SSD scan runs in *chunked* form: within a chunk of length Q everything
+is dense matmuls (MXU-friendly), across chunks a ``lax.scan`` carries the
+(H, P, N) state — the TPU-native balance between a pure recurrence (too
+sequential) and the quadratic kernel (too much memory).  Decode keeps the
+recurrent state explicitly: one token costs O(H·P·N).
+
+Shapes: d_inner = expand·d_model, H heads of head dim P = d_inner/H,
+state dim N = cfg.ssm_state, n_groups = 1 (B/C shared across heads).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import rms_norm, rms_norm_init
+from repro.sharding.logical import ann
+from repro.utils.params import Param, normal, ones, zeros
+
+__all__ = ["mamba2_init", "mamba2_forward", "mamba2_decode", "init_ssm_cache", "SSMCache"]
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array  # (B, H, P, N)
+    conv: jax.Array   # (B, W-1, conv_dim) last inputs for the causal conv
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.resolved_ssm_heads
+    p = d_inner // h
+    n = cfg.ssm_state
+    return d_inner, h, p, n
+
+
+def mamba2_init(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    d_inner, h, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        # fused in-proj: [z gate | xBC (conv path) | dt]
+        "w_in": normal(
+            ks[0],
+            (D, d_inner + conv_dim + h),
+            ("embed", "ff"),
+            dtype=dtype,
+        ),
+        "conv_w": normal(
+            ks[1], (cfg.conv_width, conv_dim), ("conv", "ff"), scale=cfg.conv_width**-0.5, dtype=dtype
+        ),
+        "conv_b": zeros((conv_dim,), ("ff",), dtype=dtype),
+        "a_log": Param(
+            jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32), ("heads",)
+        ),
+        "dt_bias": Param(
+            jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, h))).astype(jnp.float32),
+            ("heads",),
+        ),
+        "d_skip": ones((h,), ("heads",), dtype=jnp.float32),
+        "norm": rms_norm_init(d_inner, jnp.float32),
+        "w_out": normal(
+            ks[2], (d_inner, D), ("ff", "embed"), scale=d_inner**-0.5, dtype=dtype
+        ),
+    }
+
+
+def _in_proj(params, x, cfg):
+    d_inner, h, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    cd = x.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(cd))
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim :]
+    return z, xbc, dt_raw
+
+
+def _conv_apply(params, xbc, cfg, *, carry=None):
+    """Causal depthwise conv width W over (B, S, conv_dim)."""
+    w = params["conv_w"].astype(xbc.dtype)  # (W, C)
+    width = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = carry.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    out = out + params["conv_b"].astype(xbc.dtype)
+    new_carry = xp[:, -(width - 1) :, :] if width > 1 else pad
+    return jax.nn.silu(out), new_carry
+
+
+def _gates(params, dt_raw, cfg):
+    """Returns (log_decay, dt) per (B, S, H) in float32."""
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])  # (H,) negative continuous-time decay
+    log_decay = a * dt  # log exp(a·dt) = a·dt  (≤ 0)
+    return log_decay, dt
+
+
+def _ssd_chunked(xh, b_in, c_in, log_a, dt, h0, chunk: int):
+    """Chunked SSD.  xh: (B,S,H,P); b_in/c_in: (B,S,N); log_a/dt: (B,S,H).
+
+    Recurrence per head: h_t = exp(log_a_t)·h_{t-1} + dt_t·b_t xh_tᵀ;
+    y_t = c_tᵀ h_t.  Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    bsz, s, h, p = xh.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert nc * q == s, (s, q)
+
+    # Chunk-major layouts for the scan: (nc, B, Q, ...).
+    xh_c = jnp.moveaxis(xh.reshape(bsz, nc, q, h, p), 1, 0)
+    b_c = jnp.moveaxis(b_in.reshape(bsz, nc, q, n), 1, 0)
+    c_c = jnp.moveaxis(c_in.reshape(bsz, nc, q, n), 1, 0)
+    la_c = jnp.moveaxis(log_a.reshape(bsz, nc, q, h), 1, 0)
+    dt_c = jnp.moveaxis(dt.reshape(bsz, nc, q, h), 1, 0)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    @jax.checkpoint  # recompute the (B,Q,Q,H) decay tensors in backward
+    def body(h_prev, inp):
+        """One chunk: intra (dense matmuls) + inter (vs. carried state)."""
+        xc, bc, cc, la, dtc = inp  # (B,Q,H,P), (B,Q,N), (B,Q,N), (B,Q,H)×2
+        cum = jnp.cumsum(la, axis=1)  # (B,Q,H) inclusive
+        tot = cum[:, -1, :]  # (B,H)
+        # intra: ((C Bᵀ) ⊙ M) X, M[t,s] = e^{cum[t]-cum[s]}·dt[s], s ≤ t
+        scores = jnp.einsum("bqn,bkn->bqk", cc, bc)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H)
+        m = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        m = m * dtc[:, None, :, :]
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, m, xc)
+        # inter: y[t] += e^{cum[t]} · c_t · h_prev
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cc, h_prev, jnp.exp(cum))
+        # state: h = e^{tot}·h_prev + Σ_s e^{tot-cum[s]}·dt[s]·b_s x_sᵀ
+        w_s = jnp.exp(tot[:, None, :] - cum) * dtc  # (B,Q,H)
+        h_new = h_prev * jnp.exp(tot)[:, :, None, None] + jnp.einsum(
+            "bqh,bqn,bqhp->bhpn", w_s, bc, xc
+        )
+        return h_new, y_intra + y_inter
+
+    h_final, y_c = jax.lax.scan(body, h0, (xh_c, b_c, c_c, la_c, dt_c))
+    y = jnp.moveaxis(y_c, 0, 1).reshape(bsz, s, h, p)
+    return y, h_final
+
+
+def mamba2_forward(params, x, *, cfg, return_cache: bool = False):
+    """x: (B, S, D) → y (B, S, D) [, SSMCache]."""
+    bsz, s, _ = x.shape
+    d_inner, h, p, n = _dims(cfg)
+    z, xbc, dt_raw = _in_proj(params, x, cfg)
+    xbc, conv_carry = _conv_apply(params, xbc, cfg)
+    xh = xbc[..., :d_inner].reshape(bsz, s, h, p)
+    b_in = xbc[..., d_inner : d_inner + n]
+    c_in = xbc[..., d_inner + n :]
+    log_a, dt = _gates(params, dt_raw, cfg)
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    y, h_final = _ssd_chunked(
+        xh.astype(jnp.float32),
+        b_in.astype(jnp.float32),
+        c_in.astype(jnp.float32),
+        log_a,
+        dt,
+        h0,
+        cfg.chunk_size,
+    )
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    out = ann(out, "batch", "seq", "embed")
+    if return_cache:
+        return out, SSMCache(state=h_final, conv=conv_carry)
+    return out
+
+
+def init_ssm_cache(cfg, batch, dtype=jnp.float32) -> SSMCache:
+    d_inner, h, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return SSMCache(
+        state=jnp.zeros((batch, h, p, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    )
+
+
+def mamba2_decode(params, x, cache: SSMCache, *, cfg) -> Tuple[jax.Array, SSMCache]:
+    """One token: x (B, 1, D) → (y (B, 1, D), new cache)."""
+    bsz = x.shape[0]
+    d_inner, h, p, n = _dims(cfg)
+    z, xbc, dt_raw = _in_proj(params, x, cfg)
+    xbc, conv_carry = _conv_apply(params, xbc, cfg, carry=cache.conv)
+    xh = xbc[..., :d_inner].reshape(bsz, h, p)
+    b_in = xbc[..., 0, d_inner : d_inner + n]
+    c_in = xbc[..., 0, d_inner + n :]
+    log_a, dt = _gates(params, dt_raw, cfg)  # (B,1,H)
+    decay = jnp.exp(log_a[:, 0, :])  # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0, :], b_in.astype(jnp.float32), xh.astype(jnp.float32))
+    state = cache.state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c_in.astype(jnp.float32), state)
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, SSMCache(state=state, conv=conv_carry)

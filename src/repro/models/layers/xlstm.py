@@ -1,0 +1,326 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, strictly recurrent).
+
+mLSTM (Beck et al. 2024): per head, matrix state C ∈ ℝ^{P×P} and normaliser
+n ∈ ℝ^P with exponentially-gated updates
+
+    m_t = max(lf_t + m_{t-1}, li_t)                       (stabiliser)
+    C_t = e^{lf_t + m_{t-1} - m_t} C_{t-1} + e^{li_t - m_t} k_t v_tᵀ
+    n_t = e^{lf_t + m_{t-1} - m_t} n_{t-1} + e^{li_t - m_t} k_t
+    y_t = C_tᵀ q_t / max(|n_tᵀ q_t|, e^{-m_t})
+
+The stabiliser recurrence is an associative (max-plus) scan, so the whole
+layer parallelises: m is computed with ``lax.associative_scan``, after which
+the gated recurrence is a standard chunked gated-linear-attention (same
+machinery as the SSD block).  Decode carries (C, n, m) explicitly.
+
+sLSTM keeps per-unit scalar state with recurrent (hidden→gate) weights —
+inherently sequential, implemented as a ``lax.scan`` over time (the
+assignment's xlstm-125m is small enough that this is fine; decode is O(1)).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import rms_norm, rms_norm_init
+from repro.sharding.logical import ann
+from repro.utils.params import Param, normal, ones, zeros
+
+__all__ = [
+    "mlstm_init",
+    "mlstm_forward",
+    "mlstm_decode",
+    "init_mlstm_cache",
+    "slstm_init",
+    "slstm_forward",
+    "slstm_decode",
+    "init_slstm_cache",
+    "MLSTMCache",
+    "SLSTMCache",
+]
+
+
+class MLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, P, P)
+    n: jax.Array  # (B, H, P)
+    m: jax.Array  # (B, H)
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, D)
+    n: jax.Array  # (B, D)
+    h: jax.Array  # (B, D)
+    m: jax.Array  # (B, D)
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.resolved_ssm_heads
+    return d_inner, h, d_inner // h
+
+
+def mlstm_init(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    d_inner, h, p = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": normal(ks[0], (D, 2 * d_inner), ("embed", "ff"), dtype=dtype),
+        "w_qkv": normal(ks[1], (d_inner, 3 * d_inner), ("ff", "ff"), scale=d_inner**-0.5, dtype=dtype),
+        "w_if": normal(ks[2], (d_inner, 2 * h), ("ff", "heads"), scale=0.02, dtype=jnp.float32),
+        "b_if": Param(
+            jnp.concatenate([jnp.zeros((h,)), jnp.linspace(3.0, 6.0, h)]).astype(
+                jnp.float32
+            ),
+            ("heads",),
+        ),
+        "norm": rms_norm_init(d_inner, jnp.float32),
+        "w_down": normal(ks[3], (d_inner, D), ("ff", "embed"), scale=d_inner**-0.5, dtype=dtype),
+    }
+
+
+def _mlstm_gates(params, u, h):
+    """u: (B,S,d_inner) → log input/forget gates (B,S,H) float32."""
+    gf = jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    li = gf[..., :h]  # log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(gf[..., h:])  # log forget gate
+    return li, lf
+
+
+def _stab_scan(li, lf, m0):
+    """m_t = max(lf_t + m_{t-1}, li_t) via associative max-plus scan.
+
+    li/lf: (B,S,H); m0: (B,H).  The recurrence is affine in the tropical
+    semiring: composing (a, b)∘(a', b') = (a+a', max(b+a', b')) gives
+    cumulative (A_t, B_t) with m_t = max(m_0 + A_t, B_t).
+    """
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax + ay, jnp.maximum(bx + ay, by)
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (lf, li), axis=1)
+    return jnp.maximum(m0[:, None, :] + a_cum, b_cum)
+
+
+def mlstm_forward(params, x, *, cfg, return_cache: bool = False):
+    bsz, s, _ = x.shape
+    d_inner, h, p = _mlstm_dims(cfg)
+    cd = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(cd))
+    u, z = up[..., :d_inner], up[..., d_inner:]
+    qkv = jnp.einsum("bse,ef->bsf", u, params["w_qkv"].astype(cd))
+    q = qkv[..., :d_inner].reshape(bsz, s, h, p)
+    k = qkv[..., d_inner : 2 * d_inner].reshape(bsz, s, h, p) * (p**-0.5)
+    v = qkv[..., 2 * d_inner :].reshape(bsz, s, h, p)
+    li, lf = _mlstm_gates(params, u, h)
+
+    # m0 = 0 (not -inf): C/n start at zero so any finite stabiliser seed
+    # is valid, and a -1e30 sentinel would absorb the small decay terms
+    # in the float32 cumsum telescoping inside the chunked GLA.
+    m0 = jnp.zeros((bsz, h), jnp.float32)
+    m = _stab_scan(li, lf, m0)  # (B,S,H)
+    m_prev = jnp.concatenate([m0[:, None, :], m[:, :-1, :]], axis=1)
+    ldecay = lf + m_prev - m  # log of stabilised forget factor
+    lin = li - m  # log of stabilised input factor
+
+    y, (c_f, n_f) = _gla_chunked(
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        ldecay,
+        jnp.exp(lin),
+        cfg.chunk_size,
+    )
+    # normaliser denominator: max(|n_tᵀ q_t|, e^{-m_t})
+    denom = jnp.maximum(jnp.abs(y["nq"]), jnp.exp(-m))  # (B,S,H)
+    out = y["cv"] / denom[..., None]  # (B,S,H,P)
+    out = out.reshape(bsz, s, d_inner).astype(cd)
+    out = rms_norm(params["norm"], out, eps=cfg.norm_eps) * jax.nn.silu(z)
+    res = jnp.einsum("bse,ed->bsd", out, params["w_down"].astype(cd))
+    res = ann(res, "batch", "seq", "embed")
+    if return_cache:
+        m_last = m[:, -1, :]
+        return res, MLSTMCache(c=c_f, n=n_f, m=m_last)
+    return res
+
+
+def _gla_chunked(q, k, v, ldecay, b_in, chunk):
+    """Chunked gated linear attention with normaliser.
+
+    q/k/v: (B,S,H,P); ldecay/b_in: (B,S,H) (log decay, input scale).
+    Returns dict with 'cv' = Σ decayed k vᵀ read by q, 'nq' = normaliser
+    read, and the final (C, n) state.
+    """
+    bsz, s, h, p = q.shape
+    qq = min(chunk, s)
+    nc = s // qq
+    assert nc * qq == s
+
+    def chunked(t):
+        return jnp.moveaxis(t.reshape(bsz, nc, qq, *t.shape[2:]), 1, 0)
+
+    q_c, k_c, v_c = chunked(q), chunked(k), chunked(v)
+    ld_c, b_c = chunked(ldecay), chunked(b_in)
+    causal = jnp.tril(jnp.ones((qq, qq), bool))
+
+    c0 = jnp.zeros((bsz, h, p, p), jnp.float32)
+    n0 = jnp.zeros((bsz, h, p), jnp.float32)
+
+    @jax.checkpoint  # recompute the (B,Q,Q,H) gate tensors in backward
+    def body(carry, inp):
+        c_prev, n_prev = carry
+        qc, kc, vc, ld, bc = inp
+        cum = jnp.cumsum(ld, axis=1)  # (B,Q,H)
+        tot = cum[:, -1, :]
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H)
+        m = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0) * bc[:, None, :, :]
+        scores = jnp.einsum("bqhp,bkhp->bqkh", qc, kc) * m
+        cv_intra = jnp.einsum("bqkh,bkhp->bqhp", scores, vc)
+        # normaliser intra: Σ_s M[t,s]·(q_t·k_s) — the scores row-summed.
+        nq_intra = scores.sum(axis=2)  # (B,Q,H)
+        w_q = jnp.exp(cum)
+        cv_inter = jnp.einsum("bqhp,bhpo,bqh->bqho", qc, c_prev, w_q)
+        nq_inter = jnp.einsum("bqhp,bhp,bqh->bqh", qc, n_prev, w_q)
+        w_s = jnp.exp(tot[:, None, :] - cum) * bc  # (B,Q,H)
+        c_new = c_prev * jnp.exp(tot)[:, :, None, None] + jnp.einsum(
+            "bqh,bqhp,bqho->bhpo", w_s, kc, vc
+        )
+        n_new = n_prev * jnp.exp(tot)[:, :, None] + jnp.einsum(
+            "bqh,bqhp->bhp", w_s, kc
+        )
+        return (c_new, n_new), (cv_intra + cv_inter, nq_intra + nq_inter)
+
+    (c_f, n_f), (cv, nq) = jax.lax.scan(
+        body, (c0, n0), (q_c, k_c, v_c, ld_c, b_c)
+    )
+    cv = jnp.moveaxis(cv, 0, 1).reshape(bsz, s, h, p)
+    nq = jnp.moveaxis(nq, 0, 1).reshape(bsz, s, h)
+    return {"cv": cv, "nq": nq}, (c_f, n_f)
+
+
+def init_mlstm_cache(cfg, batch, dtype=jnp.float32) -> MLSTMCache:
+    d_inner, h, p = _mlstm_dims(cfg)
+    return MLSTMCache(
+        c=jnp.zeros((batch, h, p, p), jnp.float32),
+        n=jnp.zeros((batch, h, p), jnp.float32),
+        m=jnp.zeros((batch, h), jnp.float32),
+    )
+
+
+def mlstm_decode(params, x, cache: MLSTMCache, *, cfg) -> Tuple[jax.Array, MLSTMCache]:
+    bsz = x.shape[0]
+    d_inner, h, p = _mlstm_dims(cfg)
+    cd = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(cd))
+    u, z = up[..., :d_inner], up[..., d_inner:]
+    qkv = jnp.einsum("bse,ef->bsf", u, params["w_qkv"].astype(cd))
+    q = qkv[..., :d_inner].reshape(bsz, h, p).astype(jnp.float32)
+    k = (qkv[..., d_inner : 2 * d_inner].reshape(bsz, h, p) * (p**-0.5)).astype(jnp.float32)
+    v = qkv[..., 2 * d_inner :].reshape(bsz, h, p).astype(jnp.float32)
+    li, lf = _mlstm_gates(params, u, h)
+    li, lf = li[:, 0], lf[:, 0]  # (B,H)
+    m_new = jnp.maximum(lf + cache.m, li)
+    fdec = jnp.exp(lf + cache.m - m_new)
+    iin = jnp.exp(li - m_new)
+    c = cache.c * fdec[..., None, None] + iin[..., None, None] * jnp.einsum(
+        "bhp,bho->bhpo", k, v
+    )
+    n = cache.n * fdec[..., None] + iin[..., None] * k
+    cv = jnp.einsum("bhp,bhpo->bho", q, c)
+    nq = jnp.einsum("bhp,bhp->bh", q, n)
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_new))
+    out = (cv / denom[..., None]).reshape(bsz, 1, d_inner).astype(cd)
+    out = rms_norm(params["norm"], out, eps=cfg.norm_eps) * jax.nn.silu(z)
+    res = jnp.einsum("bse,ed->bsd", out, params["w_down"].astype(cd))
+    return res, MLSTMCache(c=c, n=n, m=m_new)
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    # 4 gates (i, f, z, o), input and recurrent weights.
+    return {
+        "w_x": normal(ks[0], (D, 4 * D), ("embed", "ff"), dtype=dtype),
+        "w_h": normal(ks[1], (D, 4 * D), ("embed", "ff"), scale=D**-0.5, dtype=dtype),
+        "bias": Param(
+            jnp.concatenate(
+                [jnp.zeros((D,)), jnp.full((D,), 4.0), jnp.zeros((2 * D,))]
+            ).astype(jnp.float32),
+            ("ff",),
+        ),
+        "norm": rms_norm_init(D, jnp.float32),
+        "w_out": normal(ks[2], (D, D), ("embed", "embed"), scale=D**-0.5, dtype=dtype),
+    }
+
+
+def _slstm_cell(params, xt, carry, cfg):
+    """One step.  xt: (B, 4D) pre-projected input contribution."""
+    c, n, hid, m = carry
+    d = c.shape[-1]
+    g = xt + jnp.einsum("bd,de->be", hid, params["w_h"].astype(jnp.float32)) + params["bias"]
+    li = g[..., :d]  # log-space input gate
+    lf = jax.nn.log_sigmoid(g[..., d : 2 * d])
+    zt = jnp.tanh(g[..., 2 * d : 3 * d])
+    ot = jax.nn.sigmoid(g[..., 3 * d :])
+    m_new = jnp.maximum(lf + m, li)
+    fdec = jnp.exp(lf + m - m_new)
+    iin = jnp.exp(li - m_new)
+    c_new = fdec * c + iin * zt
+    n_new = fdec * n + iin
+    h_new = ot * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(params, x, *, cfg, return_cache: bool = False):
+    bsz, s, d = x.shape
+    cd = x.dtype
+    xg = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["w_x"].astype(jnp.float32))
+    carry0 = (
+        jnp.zeros((bsz, d), jnp.float32),
+        jnp.zeros((bsz, d), jnp.float32),
+        jnp.zeros((bsz, d), jnp.float32),
+        jnp.full((bsz, d), -1e30, jnp.float32),
+    )
+
+    def body(carry, xt):
+        new = _slstm_cell(params, xt, carry, cfg)
+        return new, new[2]
+
+    carry_f, hs = jax.lax.scan(body, carry0, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(cd)  # (B,S,D)
+    h = rms_norm(params["norm"], h, eps=cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", h, params["w_out"].astype(cd))
+    out = ann(out, "batch", "seq", "embed")
+    if return_cache:
+        return out, SLSTMCache(*carry_f)
+    return out
+
+
+def init_slstm_cache(cfg, batch, dtype=jnp.float32) -> SLSTMCache:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)  # distinct buffers (donation)
+    return SLSTMCache(c=z(), n=z(), h=z(), m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def slstm_decode(params, x, cache: SLSTMCache, *, cfg) -> Tuple[jax.Array, SLSTMCache]:
+    cd = x.dtype
+    xg = jnp.einsum("bd,de->be", x[:, 0].astype(jnp.float32), params["w_x"].astype(jnp.float32))
+    new = _slstm_cell(params, xg, tuple(cache), cfg)
+    h = rms_norm(params["norm"], new[2][:, None, :].astype(cd), eps=cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", h, params["w_out"].astype(cd))
+    return out, SLSTMCache(*new)

@@ -1,0 +1,247 @@
+"""Unified decoder LM covering all assigned architectures.
+
+`init` / `forward` / `loss_fn` / `prefill` / `decode_step` over a single
+parameter tree: embed → stack (pattern-driven blocks) → final norm → head.
+
+Modality frontends are stubs per the assignment: ``audio`` replaces token
+embedding with precomputed frame embeddings (B, S, D); ``vision`` scatters
+precomputed patch embeddings over the first ``frontend_len`` positions and
+feeds M-RoPE (B, 3, S) position ids.  Loss is chunked over the sequence so
+(B, S, vocab) logits are never materialised (vocab up to 262k).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import stack as stack_lib
+from repro.models.layers import embedding as emb_lib
+from repro.models.layers.norms import rms_norm, rms_norm_init
+from repro.sharding.logical import ann
+from repro.utils.params import unzip
+
+__all__ = [
+    "init",
+    "init_unzipped",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "cache_init",
+]
+
+
+def _cdtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    pd = _pdtype(cfg)
+    params = {
+        "embed": emb_lib.embed_init(ks[0], cfg, pd),
+        "stack": stack_lib.stack_init(ks[1], cfg, pd),
+        "final_norm": rms_norm_init(cfg.d_model),
+        "head": emb_lib.head_init(ks[2], cfg, pd),
+    }
+    return params
+
+
+def init_unzipped(key, cfg):
+    """(values, logical_axes) — what the training/launch code consumes."""
+    return unzip(init(key, cfg))
+
+
+def _embed_inputs(params, batch, cfg):
+    cd = _cdtype(cfg)
+    if cfg.frontend == "audio":
+        x = batch["frame_embeds"].astype(cd)
+    else:
+        x = emb_lib.embed_apply(params["embed"], batch["tokens"], cfg, cd)
+        if cfg.frontend == "vision" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(cd)
+            x = jax.lax.dynamic_update_slice_in_dim(x, ve, 0, axis=1)
+    return x
+
+
+def _positions(batch, cfg):
+    if "positions" in batch:
+        return batch["positions"]
+    tokens = batch.get("tokens", batch.get("frame_embeds"))
+    b, s = tokens.shape[0], tokens.shape[1]
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+
+def forward(params, batch, cfg):
+    """Full-sequence forward → (hidden (B,S,D), aux_loss)."""
+    x = _embed_inputs(params, batch, cfg)
+    positions = _positions(batch, cfg)
+    mrope = batch.get("mrope_positions")
+    x, _, aux = stack_lib.stack_forward(
+        params["stack"],
+        x,
+        cfg=cfg,
+        positions=positions,
+        mrope_positions=mrope,
+        return_cache=False,
+    )
+    x = rms_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    return x, aux
+
+
+def logits_fn(params, batch, cfg):
+    """(B, S, vocab) logits — small-model / test path only."""
+    x, aux = forward(params, batch, cfg)
+    return emb_lib.head_apply(params["head"], params["embed"], x, cfg), aux
+
+
+def _chunk_ce(params, hidden, targets, mask, cfg):
+    """Chunked cross-entropy: scan over sequence chunks.
+
+    hidden: (B,S,D); targets/mask: (B,S).  Returns (sum_nll, sum_z2, count).
+    """
+    b, s, d = hidden.shape
+    c = min(cfg.loss_chunk, s)
+    nchunk = s // c
+    rem = s - nchunk * c
+
+    def one(hs, ts, ms):
+        logits = emb_lib.head_apply(params["head"], params["embed"], hs, cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)  # (B,C)
+        tgt = jnp.take_along_axis(logits, ts[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * ms
+        z2 = jnp.square(lse) * ms
+        return nll.sum(), z2.sum(), ms.sum()
+
+    if nchunk > 0:
+        hs = jnp.moveaxis(hidden[:, : nchunk * c].reshape(b, nchunk, c, d), 1, 0)
+        ts = jnp.moveaxis(targets[:, : nchunk * c].reshape(b, nchunk, c), 1, 0)
+        ms = jnp.moveaxis(mask[:, : nchunk * c].reshape(b, nchunk, c), 1, 0)
+
+        def body(carry, xs):
+            nll, z2, cnt = one(*xs)
+            return (carry[0] + nll, carry[1] + z2, carry[2] + cnt), None
+
+        (nll, z2, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (hs, ts, ms)
+        )
+    else:
+        nll = z2 = cnt = jnp.zeros(())
+    if rem:
+        n2, zz2, c2 = one(hidden[:, -rem:], targets[:, -rem:], mask[:, -rem:])
+        nll, z2, cnt = nll + n2, z2 + zz2, cnt + c2
+    return nll, z2, cnt
+
+
+def loss_fn(params, batch, cfg, train_cfg=None):
+    """Scalar LM loss + metrics.  batch needs 'targets' (B,S) int32.
+
+    'loss_mask' optional (B,S) float/bool; z-loss and MoE aux included.
+    """
+    hidden, aux = forward(params, batch, cfg)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    nll, z2, cnt = _chunk_ce(params, hidden, targets, mask, cfg)
+    cnt = jnp.maximum(cnt, 1.0)
+    ce = nll / cnt
+    z_coef = getattr(train_cfg, "z_loss", 1e-4) if train_cfg else 1e-4
+    loss = ce + z_coef * (z2 / cnt) + aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux, "tokens": cnt}
+    return loss, metrics
+
+
+def cache_init(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return stack_lib.stack_cache_init(cfg, batch, max_len, dtype)
+
+
+def prepare_decode_caches(caches, cfg, prefill_len: int, max_len: int):
+    """Convert prefill caches (natural order, length S) into decode layout.
+
+    Global-attention layers: pad the KV axis out to ``max_len`` slots.
+    Sliding-window layers: re-scatter the last ``window`` positions into the
+    ring-buffer slot order (slot = pos % window) used by ``attn_decode``.
+    Recurrent caches (SSM/xLSTM/spectral) pass through unchanged.
+    """
+    from repro.models.layers.attention import KVCache
+
+    pattern = cfg.pattern()
+    unit = stack_lib.find_unit(pattern)
+
+    from repro.models.layers.attention import _quant_tok
+
+    def convert(kind, cache):
+        if not isinstance(cache, KVCache):
+            return cache
+        window = cfg.sliding_window if kind == "attn_local" else None
+        k, v = cache.k, cache.v  # (R, B, S, KV, hd)
+        s = k.shape[2]
+        if window:
+            keep = min(window, s)
+            pos = jnp.arange(s - keep, s)
+            slots = pos % window
+            kw = jnp.zeros(k.shape[:2] + (window,) + k.shape[3:], k.dtype)
+            vw = jnp.zeros_like(kw)
+            kw = kw.at[:, :, slots].set(k[:, :, s - keep :])
+            vw = vw.at[:, :, slots].set(v[:, :, s - keep :])
+            k, v = kw, vw
+        else:
+            pad = max_len - s
+            if pad > 0:
+                padw = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+                k = jnp.pad(k, padw)
+                v = jnp.pad(v, padw)
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _quant_tok(k)
+            vq, vs = _quant_tok(v)
+            return KVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+        return KVCache(k=k, v=v)
+
+    return [convert(kind, c) for kind, c in zip(unit, caches)]
+
+
+def prefill(params, batch, cfg):
+    """Forward that also returns decode caches and last-position logits."""
+    x = _embed_inputs(params, batch, cfg)
+    positions = _positions(batch, cfg)
+    mrope = batch.get("mrope_positions")
+    x, caches, _ = stack_lib.stack_forward(
+        params["stack"],
+        x,
+        cfg=cfg,
+        positions=positions,
+        mrope_positions=mrope,
+        return_cache=True,
+    )
+    x = rms_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = emb_lib.head_apply(params["head"], params["embed"], last, cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, tokens, caches, t, cfg, *, embeds=None, mrope_positions=None):
+    """One decode step.  tokens: (B,) int32 (or embeds (B,1,D) for audio).
+
+    t: scalar int32 — the position being *written* (0-based).  Returns
+    (logits (B, vocab), new_caches).
+    """
+    cd = _cdtype(cfg)
+    if cfg.frontend == "audio" and embeds is not None:
+        x = embeds.astype(cd)
+    else:
+        x = emb_lib.embed_apply(params["embed"], tokens[:, None], cfg, cd)
+    x, caches = stack_lib.stack_decode(
+        params["stack"], x, caches, t, cfg=cfg, mrope_positions=mrope_positions
+    )
+    x = rms_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = emb_lib.head_apply(params["head"], params["embed"], x, cfg)
+    return logits[:, 0], caches

@@ -1,0 +1,248 @@
+"""Layer stack: scan-over-repeating-units with shared-block support.
+
+The per-layer pattern (cfg.pattern()) is factored into its smallest
+repeating *unit* (e.g. gemma3: 5×attn_local + 1×attn; zamba2: 6×mamba2 +
+1×shared_attn).  Parameters for each position in the unit are stacked over
+repeats (``vmap`` at init) and the forward is a single ``lax.scan`` over
+repeats — keeping HLO size O(unit) instead of O(layers), which matters for
+48–80-layer dry-run compiles.  ``shared_attn`` positions use one unstacked
+parameter set closed over by the scan body (zamba2's weight sharing).
+
+Caches ride through the scan as stacked xs/ys (leading dim = repeats).
+MoE aux losses accumulate in the carry.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.utils.params import Param, map_params
+
+__all__ = ["find_unit", "stack_init", "stack_forward", "stack_decode", "stack_cache_init"]
+
+
+def find_unit(pattern: tuple) -> tuple:
+    n = len(pattern)
+    for u in range(1, n + 1):
+        if n % u == 0 and tuple(pattern[:u]) * (n // u) == tuple(pattern):
+            return tuple(pattern[:u])
+    return tuple(pattern)
+
+
+def _repeats(cfg) -> int:
+    pattern = cfg.pattern()
+    return len(pattern) // len(find_unit(pattern))
+
+
+def stack_init(key, cfg, dtype) -> dict:
+    pattern = cfg.pattern()
+    unit = find_unit(pattern)
+    reps = len(pattern) // len(unit)
+    out = {"unit": {}}
+    keys = jax.random.split(key, len(unit) + 1)
+    for i, kind in enumerate(unit):
+        if kind == "shared_attn":
+            if "shared" not in out:
+                out["shared"] = blocks.block_init(keys[-1], kind, cfg, dtype)
+            out["unit"][f"b{i}"] = {}
+            continue
+        rep_keys = jax.random.split(keys[i], reps)
+        stacked = jax.vmap(
+            lambda k, kind=kind: blocks.block_init(k, kind, cfg, dtype)
+        )(rep_keys)
+        # vmap stacked the values; record the new leading 'layers' axis.
+        out["unit"][f"b{i}"] = map_params(
+            lambda p: Param(p.value, ("layers",) + p.axes), stacked
+        )
+    return out
+
+
+def _split_unit(params, unit, r: Optional[int] = None):
+    """Per-repeat slice (r=None keeps the stacked leading dim)."""
+    res = []
+    for i, kind in enumerate(unit):
+        p = params["unit"][f"b{i}"]
+        if kind == "shared_attn":
+            res.append(params["shared"])
+        elif r is not None:
+            res.append(jax.tree.map(lambda x: x[r], p))
+        else:
+            res.append(p)
+    return res
+
+
+def stack_forward(
+    params,
+    x,
+    *,
+    cfg,
+    positions,
+    mrope_positions=None,
+    return_cache: bool = False,
+):
+    """x: (B,S,D) → (x, caches (stacked per repeat) | None, aux)."""
+    pattern = cfg.pattern()
+    unit = find_unit(pattern)
+    reps = len(pattern) // len(unit)
+    shared = params.get("shared")
+
+    def unit_body(x, unit_params):
+        aux = jnp.zeros((), jnp.float32)
+        caches = []
+        for i, kind in enumerate(unit):
+            p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
+            x, cache, a = blocks.block_forward(
+                p,
+                x,
+                kind=kind,
+                cfg=cfg,
+                positions=positions,
+                mrope_positions=mrope_positions,
+                return_cache=return_cache,
+            )
+            caches.append(cache)
+            aux = aux + a
+        return x, caches, aux
+
+    if cfg.remat:
+        unit_body = jax.checkpoint(unit_body)
+
+    if not cfg.scan_layers or reps == 1:
+        aux_total = jnp.zeros((), jnp.float32)
+        all_caches = []
+        for r in range(reps):
+            up = {
+                f"b{i}": (
+                    {} if unit[i] == "shared_attn"
+                    else jax.tree.map(lambda v: v[r], params["unit"][f"b{i}"])
+                )
+                for i in range(len(unit))
+            }
+            x, caches, aux = unit_body(x, up)
+            all_caches.append(caches)
+            aux_total = aux_total + aux
+        caches_out = None
+        if return_cache:
+            caches_out = jax.tree.map(lambda *xs: jnp.stack(xs), *all_caches)
+        return x, caches_out, aux_total
+
+    scanned = {
+        f"b{i}": params["unit"][f"b{i}"]
+        for i in range(len(unit))
+        if unit[i] != "shared_attn"
+    }
+
+    def scan_body(carry, unit_params_r):
+        x, aux = carry
+        up = dict(unit_params_r)
+        for i, kind in enumerate(unit):
+            if kind == "shared_attn":
+                up[f"b{i}"] = {}
+        x, caches, a = unit_body(x, up)
+        caches = [c for c in caches] if return_cache else None
+        return (x, aux + a), caches
+
+    (x, aux), caches = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), scanned
+    )
+    return x, (caches if return_cache else None), aux
+
+
+def stack_cache_init(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked caches: one entry per unit position, leading dim = repeats."""
+    pattern = cfg.pattern()
+    unit = find_unit(pattern)
+    reps = len(pattern) // len(unit)
+    caches = []
+    for kind in unit:
+        one = blocks.block_cache_init(kind, cfg, batch, max_len, dtype)
+        caches.append(jax.tree.map(lambda x: jnp.stack([x] * reps), one))
+    return caches
+
+
+def stack_decode(params, x, caches, t, *, cfg, mrope_positions=None):
+    """One decode step through the whole stack.  caches: stacked list.
+
+    The caches ride in the scan *carry*, updated per repeat with a
+    dynamic-update-slice at the loop index: XLA aliases while-loop carries
+    in place, so the (potentially tens-of-GB) cache is held **once**.
+    Passing caches as xs/ys instead double-buffers them (measured +1× the
+    full KV cache of temp on the 32k decode cells).
+    """
+    pattern = cfg.pattern()
+    unit = find_unit(pattern)
+    reps = len(pattern) // len(unit)
+    shared = params.get("shared")
+
+    scanned_params = {
+        f"b{i}": params["unit"][f"b{i}"]
+        for i in range(len(unit))
+        if unit[i] != "shared_attn"
+    }
+
+    def apply_unit(x, unit_params_r, caches_r):
+        new_caches = []
+        for i, kind in enumerate(unit):
+            p = shared if kind == "shared_attn" else unit_params_r[f"b{i}"]
+            x, c = blocks.block_decode(
+                p,
+                x,
+                caches_r[i],
+                t,
+                kind=kind,
+                cfg=cfg,
+                mrope_positions=mrope_positions,
+            )
+            new_caches.append(c)
+        return x, new_caches
+
+    if not cfg.scan_layers or reps == 1:
+        new_caches = []
+        for r in range(reps):
+            up = {
+                k: jax.tree.map(lambda v: v[r], v_)
+                for k, v_ in scanned_params.items()
+            }
+            cr = jax.tree.map(lambda v: v[r], caches)
+            x, nc = apply_unit(x, up, cr)
+            new_caches.append(nc)
+        caches_out = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return x, caches_out
+
+    if cfg.decode_cache_mode == "ys":
+        # xs/ys form: double-buffers the cache but never reshards it inside
+        # the loop — wins when kv_heads don't divide the model axis (§Perf).
+        def ys_body(x, xs):
+            unit_params_r, caches_r = xs
+            x, nc = apply_unit(x, unit_params_r, caches_r)
+            nc = jax.tree.map(lambda buf, c: c.astype(buf.dtype), caches_r, nc)
+            return x, nc
+
+        x, new_caches = jax.lax.scan(ys_body, x, (scanned_params, caches))
+        return x, new_caches
+
+    def scan_body(carry, unit_params_r):
+        x, caches, r = carry
+        caches_r = jax.tree.map(
+            lambda v: jax.lax.dynamic_index_in_dim(v, r, 0, keepdims=False),
+            caches,
+        )
+        x, new_r = apply_unit(x, unit_params_r, caches_r)
+        caches = jax.tree.map(
+            lambda buf, nc: jax.lax.dynamic_update_index_in_dim(
+                buf, nc.astype(buf.dtype), r, 0
+            ),
+            caches,
+            new_r,
+        )
+        return (x, caches, r + 1), None
+
+    (x, caches, _), _ = jax.lax.scan(
+        scan_body, (x, caches, jnp.asarray(0, jnp.int32)), scanned_params
+    )
+    return x, caches

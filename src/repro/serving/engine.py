@@ -1,0 +1,65 @@
+"""Batched decode engine: prefill → jitted token loop with KV/SSM caches.
+
+A deliberately small but real serving path: batch of prompts in, prefill
+once (building caches), then a jit-compiled ``decode_fn`` generates tokens
+until ``max_new`` (per-sequence EOS masking included).  The decode step is
+the function the dry-run lowers for the ``decode_*`` shape cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.serving.sampling import sample
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: int = 3
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg, params, serve_cfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self._decode = jax.jit(self._decode_fn)
+
+    def _decode_fn(self, params, tokens, caches, t, key):
+        logits, caches = model_lib.decode_step(params, tokens, caches, t, self.cfg)
+        key, sub = jax.random.split(key)
+        nxt = sample(
+            sub, logits, temperature=self.scfg.temperature, top_k=self.scfg.top_k
+        )
+        return nxt, caches, key
+
+    def generate(self, prompts: jax.Array, *, max_new: Optional[int] = None):
+        """prompts: (B, S) int32 → (B, max_new) int32 generated tokens."""
+        b, s = prompts.shape
+        max_new = max_new or self.scfg.max_new
+        batch = {"tokens": prompts}
+        logits, caches = model_lib.prefill(self.params, batch, self.cfg)
+        caches = model_lib.prepare_decode_caches(caches, self.cfg, s, s + max_new)
+        key = jax.random.PRNGKey(self.scfg.seed)
+        key, sub = jax.random.split(key)
+        nxt = sample(sub, logits, temperature=self.scfg.temperature, top_k=self.scfg.top_k)
+        out = [nxt]
+        done = nxt == self.scfg.eos_id
+        for i in range(max_new - 1):
+            t = jnp.asarray(s + i, jnp.int32)
+            nxt, caches, key = self._decode(self.params, nxt, caches, t, key)
+            nxt = jnp.where(done, self.scfg.eos_id, nxt)
+            done = done | (nxt == self.scfg.eos_id)
+            out.append(nxt)
+        return jnp.stack(out, axis=1)

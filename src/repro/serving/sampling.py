@@ -1,0 +1,20 @@
+"""Sampling: greedy / temperature / top-k over final logits."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample"]
+
+
+def sample(key, logits, *, temperature: float = 0.0, top_k: int = 0):
+    """logits: (B, V) float32 → (B,) int32 token ids."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,137 @@
+"""Logical-axis → mesh-axis rules (t5x/MaxText style).
+
+Model code names array axes logically ('batch', 'heads', 'ff', ...); this
+module maps them to physical mesh axes given a :class:`ParallelConfig`.
+Activations are annotated through :func:`ann` (a no-op outside a mesh
+context, so the same model code runs on a single CPU device in tests).
+
+Parallelism coverage:
+  DP    batch        → ('pod', 'data')
+  TP    heads/ff/vocab/experts → 'model'
+  FSDP  embed (params' largest replicated axis) → 'data' when enabled
+  EP    experts      → 'model'
+  SP    kv_seq / long sequences → 'data' when sequence_parallel
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ParallelConfig
+
+__all__ = ["rules_for", "spec_for", "ann", "mesh_context", "current_mesh"]
+
+_state = threading.local()
+
+
+def rules_for(par: ParallelConfig) -> dict[str, Optional[tuple]]:
+    batch_axes = (
+        (par.pod_axis, par.data_axis) if par.pod_axis else (par.data_axis,)
+    )
+    if par.decode_weight_stationary:
+        # One-token decode with FSDP weights: replicate the (tiny) batch and
+        # contract the data-sharded embed dim locally — small all-reduces
+        # instead of per-layer full weight all-gathers.
+        return {
+            "batch": None,
+            "seq": None,
+            "kv_seq": (par.data_axis,) if par.sequence_parallel else None,
+            "embed": batch_axes,
+            "heads": (par.model_axis,),
+            "kv_heads": (par.model_axis,),
+            "head_dim": None,
+            "ff": (par.model_axis,),
+            "vocab": (par.model_axis,),
+            "experts": (par.model_axis,),
+            "expert_ff": None,
+            "state": None,
+            "conv": None,
+            "filter": None,
+            "frames": None,
+        }
+    rules: dict[str, Optional[tuple]] = {
+        "batch": batch_axes,
+        "seq": None,
+        "kv_seq": (par.data_axis,) if par.sequence_parallel else None,
+        # FSDP shards params over every data-parallel axis (pod included on
+        # the multi-pod mesh); activations never see it ('batch' claims the
+        # data axes first and duplicates are dropped).
+        "embed": batch_axes if par.fsdp else None,
+        "heads": (par.model_axis,),
+        "kv_heads": (par.model_axis,),
+        "head_dim": None,
+        "ff": (par.model_axis,),
+        "vocab": (par.model_axis,),
+        "experts": (par.model_axis,),
+        "expert_ff": None,
+        "state": None,
+        "conv": None,
+        "filter": None,
+        "frames": None,
+    }
+    return rules
+
+
+def spec_for(axes: tuple, par: ParallelConfig) -> PartitionSpec:
+    """PartitionSpec for a tuple of logical axis names (None = replicated)."""
+    rules = rules_for(par)
+    entries = []
+    used: set[str] = set()
+    for name in axes:
+        if name is None:
+            entries.append(None)
+            continue
+        phys = rules.get(name)
+        if phys is None:
+            entries.append(None)
+            continue
+        # A mesh axis may appear at most once in a spec.
+        phys = tuple(p for p in phys if p not in used)
+        if not phys:
+            entries.append(None)
+            continue
+        used.update(phys)
+        entries.append(phys if len(phys) > 1 else phys[0])
+    return PartitionSpec(*entries)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, par: ParallelConfig):
+    """Activate activation-annotation within a mesh for model code."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, par)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Optional[tuple]:
+    return getattr(_state, "ctx", None)
+
+
+def data_shard_count() -> int:
+    """Number of data-parallel shards (pod·data) in the active mesh (1 if none)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return 1
+    mesh, par = ctx
+    n = mesh.shape[par.data_axis]
+    if par.pod_axis:
+        n *= mesh.shape[par.pod_axis]
+    return int(n)
+
+
+def ann(x, *axes):
+    """Annotate an activation with logical axes (no-op without a mesh)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, par = ctx
+    spec = spec_for(axes, par)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

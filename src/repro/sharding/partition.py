@@ -1,0 +1,90 @@
+"""Parameter PartitionSpecs: logical axes → NamedSharding with divisibility
+fallback (a mesh axis that does not divide a dim is dropped to replication —
+e.g. kv_heads=8 on a model=16 axis)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ParallelConfig
+from repro.sharding.logical import rules_for
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "check_divisible"]
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, str):
+        return mesh.shape[phys]
+    return int(np.prod([mesh.shape[p] for p in phys]))
+
+
+def _spec_entry(name, dim, mesh, rules, used):
+    if name is None:
+        return None
+    phys = rules.get(name)
+    if phys is None:
+        return None
+    phys = tuple(p for p in phys if p not in used)
+    if not phys:
+        return None
+    # drop trailing axes until the product divides the dim
+    while phys and dim % _axis_size(mesh, phys) != 0:
+        phys = phys[:-1]
+    if not phys:
+        return None
+    used.update(phys)
+    return phys if len(phys) > 1 else phys[0]
+
+
+def spec_for_shape(axes: tuple, shape: tuple, mesh: Mesh, par: ParallelConfig) -> PartitionSpec:
+    rules = rules_for(par)
+    used: set = set()
+    entries = [
+        _spec_entry(name, dim, mesh, rules, used)
+        for name, dim in zip(axes, shape)
+    ]
+    return PartitionSpec(*entries)
+
+
+def param_specs(axes_tree, shapes_tree, mesh: Mesh, par: ParallelConfig):
+    """PartitionSpec tree for parameters (axes + value shapes in lockstep)."""
+
+    def one(axes, val):
+        return spec_for_shape(tuple(axes), tuple(val.shape), mesh, par)
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_shardings(axes_tree, shapes_tree, mesh: Mesh, par: ParallelConfig):
+    specs = param_specs(axes_tree, shapes_tree, mesh, par)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def batch_specs(batch_tree, mesh: Mesh, par: ParallelConfig):
+    """Shard every batch input over ('pod','data') on dim 0 when divisible."""
+    rules = rules_for(par)
+    batch_axes = rules["batch"]
+
+    def one(x):
+        if x.ndim == 0:
+            return PartitionSpec()
+        used: set = set()
+        entry = _spec_entry("batch", x.shape[0], mesh, {"batch": batch_axes}, used)
+        return PartitionSpec(entry, *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def check_divisible(shape, spec: PartitionSpec, mesh: Mesh) -> bool:
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            continue
+        if dim % _axis_size(mesh, entry) != 0:
+            return False
+    return True

@@ -1,0 +1,55 @@
+"""Int8 gradient compression with error feedback.
+
+Distributed-optimization trick for the cross-pod data-parallel all-reduce:
+gradients are quantised to int8 with a per-tensor scale before the reduce,
+and the quantisation residual is carried into the next step (error
+feedback), which keeps SGD/Adam convergence unaffected to first order
+(Seide et al. 2014; Karimireddy et al. 2019).
+
+Under jit + GSPMD the psum of the int8-dequantised values is what crosses
+the slow pod links; the residual state lives alongside the optimizer state
+and is checkpointed with it.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_state", "compress_grads", "quantize_int8", "dequantize_int8"]
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, err_state):
+    """Returns (decompressed grads to feed the optimizer, new error state).
+
+    The dequantised value is what the all-reduce transmits; the residual
+    (g + e − deq) is fed back next step.
+    """
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq, g32 - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])

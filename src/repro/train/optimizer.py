@@ -1,0 +1,169 @@
+"""Self-contained optimizers (no optax dependency): AdamW, Adafactor, SGD.
+
+Each optimizer is an (init, update) pair over plain pytrees.
+
+Adafactor matters at assignment scale: arctic-480b's Adam state (8 bytes/
+param of fp32 moments) cannot fit 256×16 GB chips alongside bf16 params and
+activations; factored second moments cut optimizer state to O(rows + cols).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_optimizer", "OptState", "global_norm", "clip_by_global_norm"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+
+def _adamw(train_cfg):
+    b1, b2, eps, wd = train_cfg.b1, train_cfg.b2, 1e-8, train_cfg.weight_decay
+
+    def init(params):
+        # m and v must be distinct buffers (donation aliases them otherwise).
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), inner={"m": m, "v": v})
+
+    def update(grads, state, params, lr):
+        t = state.step + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+            state.inner["m"],
+            grads,
+        )
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.inner["v"],
+            grads,
+        )
+        bc1 = 1 - b1**tf
+        bc2 = 1 - b2**tf
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, OptState(step=t, inner={"m": m, "v": v})
+
+    return init, update
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment)
+# --------------------------------------------------------------------------
+
+
+def _adafactor(train_cfg):
+    eps = 1e-30
+    clip_thr = 1.0
+    wd = train_cfg.weight_decay
+    d2 = train_cfg.b2  # decay for the running stats
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return OptState(
+            step=jnp.zeros((), jnp.int32), inner=jax.tree.map(
+                one, params, is_leaf=lambda x: hasattr(x, "shape")
+            )
+        )
+
+    def update(grads, state, params, lr):
+        t = state.step + 1
+        tf = t.astype(jnp.float32)
+        beta = 1.0 - tf ** -0.8  # Adafactor's step-dependent decay
+        beta = jnp.minimum(beta, d2)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                # V ≈ (vr ⊗ vc) / mean(vr)  (Shazeer & Stern eq. 4)
+                u = g * jax.lax.rsqrt(
+                    (vr[..., None] * vc[..., None, :])
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], eps)
+                    + eps
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS ≤ 1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_thr)
+            newp = p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+            return newp.astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state.inner)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_inner = tdef.unflatten([o[1] for o in out])
+        return new_params, OptState(step=t, inner=new_inner)
+
+    return init, update
+
+
+def _sgd(train_cfg):
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32), inner=())
+
+    def update(grads, state, params, lr):
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new_params, OptState(step=state.step + 1, inner=())
+
+    return init, update
+
+
+def make_optimizer(train_cfg):
+    if train_cfg.optimizer == "adamw":
+        return _adamw(train_cfg)
+    if train_cfg.optimizer == "adafactor":
+        return _adafactor(train_cfg)
+    if train_cfg.optimizer == "sgd":
+        return _sgd(train_cfg)
+    raise ValueError(f"unknown optimizer {train_cfg.optimizer!r}")

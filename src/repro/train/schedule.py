@@ -1,0 +1,23 @@
+"""LR schedules: linear warmup → cosine decay (the usual LM default)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["make_schedule"]
+
+
+def make_schedule(train_cfg):
+    peak = train_cfg.learning_rate
+    warmup = max(1, train_cfg.warmup_steps)
+    total = max(train_cfg.total_steps, warmup + 1)
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        # warmup starts at peak/warmup (not 0): step 0 should train.
+        warm = peak * (step + 1.0) / warmup
+        progress = jnp.clip((step - warmup) / (total - warmup), 0.0, 1.0)
+        cos = 0.5 * peak * (1.0 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,109 @@
+"""Param-with-logical-axes utilities.
+
+Every layer ``init`` returns a pytree whose leaves are :class:`Param` —
+a value plus the tuple of *logical* axis names that
+``repro.sharding.logical`` later maps to mesh ``PartitionSpec``s.  Keeping
+value and axes in one leaf means the sharding metadata can never drift out
+of sync with the parameter structure (single source of truth).
+
+``Param`` is registered as a pytree node whose only child is ``value`` and
+whose ``axes`` ride along as static aux data — so ``jax.vmap`` over an init
+function stacks values while preserving axes (the stack layer then prepends
+the 'layers' logical axis explicitly).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Param",
+    "unzip",
+    "normal",
+    "zeros",
+    "ones",
+    "count_params",
+    "map_params",
+]
+
+
+class Param:
+    """A parameter value + logical axis names (pytree node, axes static)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value: Any, axes: Tuple[Optional[str], ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, axes={self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes),
+)
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def map_params(fn, tree):
+    """tree_map over Param leaves (passes non-Param leaves through)."""
+    return jax.tree.map(
+        lambda p: fn(p) if isinstance(p, Param) else p, tree, is_leaf=_is_param
+    )
+
+
+def unzip(tree):
+    """Split a Param tree into (values, axes) trees of identical structure.
+
+    Plain (non-Param) array leaves are treated as fully replicated.
+    """
+
+    def _val(p):
+        return p.value if isinstance(p, Param) else p
+
+    def _ax(p):
+        if isinstance(p, Param):
+            # Stacking (vmap/scan) adds *leading* dims; pad axes at the front
+            # so trailing logical names stay aligned with their dims.
+            nd = jnp.ndim(p.value)
+            ax = tuple(p.axes)
+            if len(ax) < nd:
+                ax = (None,) * (nd - len(ax)) + ax
+            elif len(ax) > nd:
+                ax = ax[-nd:]
+            return ax
+        return (None,) * jnp.ndim(p)
+
+    values = jax.tree.map(_val, tree, is_leaf=_is_param)
+    axes = jax.tree.map(_ax, tree, is_leaf=_is_param)
+    return values, axes
+
+
+def normal(key, shape, axes, *, scale=None, dtype=jnp.float32) -> Param:
+    if scale is None:
+        # fan-in scaling on the first axis (embed/in dim by convention).
+        scale = shape[0] ** -0.5
+    v = jax.random.normal(key, shape, dtype=jnp.float32) * scale
+    return Param(v.astype(dtype), tuple(axes))
+
+
+def zeros(shape, axes, *, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def ones(shape, axes, *, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), tuple(axes))
+
+
+def count_params(values_tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(values_tree))

@@ -1,0 +1,34 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device by
+design (the 512-device mesh belongs to the dry-run only).  Multi-device
+tests spawn subprocesses with their own flags."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run python ``code`` with N fake CPU devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout

@@ -1,0 +1,76 @@
+"""Checkpoint manager: atomicity, async, keep-N, elastic restore."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _state(seed):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jnp.arange(5, dtype=jnp.float32)},
+        "step": jnp.asarray(seed, jnp.int32),
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    s = _state(3)
+    mgr.save(3, s, extra={"data_step": 3})
+    r, extra = mgr.restore(3, s)
+    assert extra["data_step"] == 3
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    for i in range(3):
+        mgr.save(i, _state(i), blocking=False)
+    mgr.wait()
+    assert mgr.all_steps() == [0, 1, 2]
+
+
+def test_keep_n_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for i in range(5):
+        mgr.save(i, _state(i))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_latest_and_autoresume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.latest_step() is None
+    mgr.save(10, _state(10))
+    mgr.save(20, _state(20))
+    assert mgr.latest_step() == 20
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state(1))
+    # simulate a crash mid-write: directory without manifest
+    os.makedirs(tmp_path / "step_00000002")
+    assert mgr.latest_step() == 1
+
+
+def test_structure_mismatch_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state(1))
+    with pytest.raises(AssertionError, match="architecture mismatch"):
+        mgr.restore(1, {"only_one_leaf": jnp.zeros(3)})
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.ones((4,), jnp.float32)})
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    r, _ = mgr.restore(1, like)
+    assert r["w"].dtype == jnp.bfloat16

@@ -1,0 +1,66 @@
+"""FFT convolution vs direct convolution (incl. hypothesis sweep)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conv import fft_conv, next_pow2
+
+
+def _direct_causal(x, h):
+    L = x.shape[-1]
+    out = np.zeros_like(x)
+    for j in range(h.shape[-1]):
+        if j < L:
+            out[..., j:] += h[..., j : j + 1] * x[..., : L - j]
+    return out
+
+
+def test_next_pow2():
+    assert next_pow2(1) == 1
+    assert next_pow2(5) == 8
+    assert next_pow2(1024) == 1024
+    assert next_pow2(1025) == 2048
+
+
+def test_fft_conv_matches_direct(rng):
+    x = rng.standard_normal((2, 4, 128)).astype(np.float32)
+    h = rng.standard_normal((4, 32)).astype(np.float32)
+    y = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(h)))
+    ref = _direct_causal(x, h[None])
+    np.testing.assert_allclose(y, ref, atol=1e-3)
+
+
+def test_fft_conv_full_mode(rng):
+    x = rng.standard_normal((1, 64)).astype(np.float32)
+    h = rng.standard_normal((1, 16)).astype(np.float32)
+    y = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(h), causal=False))
+    ref = np.convolve(x[0], h[0], mode="full")[None]
+    np.testing.assert_allclose(y, ref, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    L=st.sampled_from([16, 100, 256, 500]),
+    Lh=st.sampled_from([1, 4, 33, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fft_conv_property(L, Lh, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1, L)).astype(np.float32)
+    h = rng.standard_normal((1, Lh)).astype(np.float32)
+    y = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(h)))
+    ref = _direct_causal(x, h)
+    scale = max(1.0, np.abs(ref).max())
+    np.testing.assert_allclose(y, ref, atol=2e-3 * scale)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_conv_commutes_with_filter_scaling(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1, 128)).astype(np.float32)
+    h = rng.standard_normal((1, 16)).astype(np.float32)
+    y1 = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(2.0 * h)))
+    y2 = 2.0 * np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(h)))
+    np.testing.assert_allclose(y1, y2, atol=1e-3)

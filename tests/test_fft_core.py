@@ -1,0 +1,140 @@
+"""Core FFT correctness + property-based invariants (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fft as F
+
+BACKENDS = ["stockham", "xla", "pallas"]
+SIZES = [2, 8, 64, 256, 1024, 4096]
+
+
+def _rand_c(rng, shape):
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(
+        np.complex64
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n", SIZES)
+def test_fft_matches_numpy(backend, n, rng):
+    x = _rand_c(rng, (3, n))
+    y = np.asarray(F.fft(jnp.asarray(x), backend=backend))
+    ref = np.fft.fft(x)
+    np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-3 * np.abs(ref).max())
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fft_large_split_regime(backend, rng):
+    n = 2**17  # forces the 2-round-trip plan
+    x = _rand_c(rng, (1, n))
+    y = np.asarray(F.fft(jnp.asarray(x), backend=backend))
+    ref = np.fft.fft(x)
+    rel = np.abs(y - ref).max() / np.abs(ref).max()
+    assert rel < 5e-5, rel
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n", [16, 1024, 4096])
+def test_roundtrip(backend, n, rng):
+    x = _rand_c(rng, (2, n))
+    y = F.ifft(F.fft(jnp.asarray(x), backend=backend), backend=backend)
+    np.testing.assert_allclose(np.asarray(y), x, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", [16, 256, 4096])
+def test_rfft_matches_numpy(n, rng):
+    x = rng.standard_normal((2, n)).astype(np.float32)
+    Xr, Xi = F.rfft(jnp.asarray(x))
+    ref = np.fft.rfft(x)
+    np.testing.assert_allclose(np.asarray(Xr), ref.real, atol=3e-3 * np.abs(ref).max())
+    np.testing.assert_allclose(np.asarray(Xi), ref.imag, atol=3e-3 * np.abs(ref).max())
+    back = np.asarray(F.irfft((Xr, Xi), n))
+    np.testing.assert_allclose(back, x, atol=2e-4)
+
+
+def test_fft2_matches_numpy(rng):
+    x = _rand_c(rng, (2, 64, 128))
+    y = np.asarray(F.fft2(jnp.asarray(x)))
+    ref = np.fft.fft2(x)
+    np.testing.assert_allclose(y, ref, atol=2e-3 * np.abs(ref).max())
+
+
+def test_planes_api(rng):
+    x = _rand_c(rng, (2, 256))
+    yr, yi = F.fft((jnp.asarray(x.real), jnp.asarray(x.imag)))
+    ref = np.fft.fft(x)
+    np.testing.assert_allclose(np.asarray(yr), ref.real, atol=2e-3 * np.abs(ref).max())
+    np.testing.assert_allclose(np.asarray(yi), ref.imag, atol=2e-3 * np.abs(ref).max())
+
+
+# --------------------------------------------------------------------------
+# property-based invariants
+# --------------------------------------------------------------------------
+
+_sizes = st.sampled_from([8, 64, 256, 1024])
+_seed = st.integers(0, 2**31 - 1)
+_backend = st.sampled_from(BACKENDS)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=_sizes, seed=_seed, backend=_backend)
+def test_linearity(n, seed, backend):
+    rng = np.random.default_rng(seed)
+    a, b = rng.standard_normal(2).astype(np.float32)
+    x = _rand_c(rng, (n,))
+    y = _rand_c(rng, (n,))
+    lhs = F.fft(jnp.asarray(a * x + b * y), backend=backend)
+    rhs = a * F.fft(jnp.asarray(x), backend=backend) + b * F.fft(
+        jnp.asarray(y), backend=backend
+    )
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=_sizes, seed=_seed, backend=_backend)
+def test_parseval(n, seed, backend):
+    rng = np.random.default_rng(seed)
+    x = _rand_c(rng, (n,))
+    X = np.asarray(F.fft(jnp.asarray(x), backend=backend))
+    lhs = np.sum(np.abs(x) ** 2)
+    rhs = np.sum(np.abs(X) ** 2) / n
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=_sizes, seed=_seed, shift=st.integers(0, 63), backend=_backend)
+def test_time_shift_theorem(n, seed, shift, backend):
+    rng = np.random.default_rng(seed)
+    shift = shift % n
+    x = _rand_c(rng, (n,))
+    X = np.asarray(F.fft(jnp.asarray(x), backend=backend))
+    Xs = np.asarray(F.fft(jnp.asarray(np.roll(x, shift)), backend=backend))
+    k = np.arange(n)
+    phase = np.exp(-2j * np.pi * k * shift / n)
+    np.testing.assert_allclose(Xs, X * phase, atol=2e-2 * (np.abs(X).max() + 1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=_sizes, pos=st.integers(0, 1023), backend=_backend)
+def test_impulse_is_phasor(n, pos, backend):
+    pos = pos % n
+    x = np.zeros(n, np.complex64)
+    x[pos] = 1.0
+    X = np.asarray(F.fft(jnp.asarray(x), backend=backend))
+    k = np.arange(n)
+    ref = np.exp(-2j * np.pi * k * pos / n)
+    np.testing.assert_allclose(X, ref, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=_sizes, seed=_seed)
+def test_backends_agree(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(_rand_c(rng, (n,)))
+    ys = [np.asarray(F.fft(x, backend=b)) for b in BACKENDS]
+    np.testing.assert_allclose(ys[0], ys[1], atol=1e-2)
+    np.testing.assert_allclose(ys[0], ys[2], atol=1e-2)

@@ -1,0 +1,74 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on CPU,
+asserting output shapes and no NaNs (the assignment's smoke contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig, get_config, list_archs
+from repro.configs.reduce import make_reduced
+from repro.models import model as M
+from repro.train.train_loop import init_train_state, make_train_step
+
+ARCHS = [a for a in list_archs() if get_config(a).family != "fft"]
+
+
+def _batch_for(cfg, b, s, key):
+    ks = jax.random.split(key, 4)
+    batch = {
+        "targets": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "audio":
+        batch["frame_embeds"] = jax.random.normal(ks[0], (b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size)
+    if cfg.frontend == "vision":
+        fl = min(cfg.frontend_len, s)
+        batch["vision_embeds"] = jax.random.normal(ks[2], (b, fl, cfg.d_model), jnp.bfloat16)
+        batch["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, None, :], (b, 3, s)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = make_reduced(get_config(arch))
+    b, s = 2, 32
+    batch = _batch_for(cfg, b, s, jax.random.PRNGKey(1))
+
+    params, axes = M.init_unzipped(jax.random.PRNGKey(0), cfg)
+    # forward: correct shapes, finite values
+    logits, aux = M.logits_fn(params, batch, cfg)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    # one train step: loss finite and params updated
+    tc = TrainConfig(total_steps=2, warmup_steps=1, learning_rate=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    step = jax.jit(make_train_step(cfg, tc))
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: non-finite loss"
+    assert int(new_state.step) == 1
+    # at least one parameter changed
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b_))
+        for a, b_ in zip(jax.tree.leaves(state.params), jax.tree.leaves(new_state.params))
+    )
+    assert changed, f"{arch}: no parameter updated"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_prefill_decode(arch):
+    cfg = make_reduced(get_config(arch))
+    b, s = 2, 16
+    batch = _batch_for(cfg, b, s, jax.random.PRNGKey(2))
+    params, _ = M.init_unzipped(jax.random.PRNGKey(0), cfg)
+    logits, caches = M.prefill(params, batch, cfg)
+    assert logits.shape == (b, cfg.vocab_size)
+    caches = M.prepare_decode_caches(caches, cfg, s, s + 4)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    lg, caches = M.decode_step(params, tok, caches, jnp.asarray(s, jnp.int32), cfg)
+    assert lg.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all()), f"{arch}: non-finite decode logits"

@@ -1,0 +1,58 @@
+"""Plan schedule tests — the paper's kernel-call-count table (§2.3.2/§3)."""
+
+import pytest
+
+from repro.core import plan as P
+
+
+def test_direct_regime():
+    for n in (2, 16, 256, 1024):
+        p = P.plan_fft(n)
+        assert p.kernel_calls == 1
+        assert p.leaf_passes[0].kind == "direct"
+
+
+def test_fused_regime_one_call():
+    for n in (2048, 4096, 16384, 65536):
+        p = P.plan_fft(n)
+        assert p.kernel_calls == 1, n
+        assert p.leaf_passes[-1].kind == "fused4"
+
+
+def test_split_regimes_match_paper_structure():
+    # Above the fused limit each factor-split adds one HBM round trip,
+    # mirroring the paper's 2-call and 3-call regimes.
+    assert P.plan_fft(2**17).kernel_calls == 2
+    assert P.plan_fft(2**24).kernel_calls == 2
+    assert P.plan_fft(2**32).kernel_calls == 2  # 65536 x 65536
+    assert P.plan_fft(2**33).kernel_calls == 3
+
+
+def test_balanced_split():
+    for n in (4, 64, 1024, 2**20):
+        n1, n2 = P.balanced_split(n)
+        assert n1 * n2 == n
+        assert n1 >= n2
+        assert n1 // n2 in (1, 2)
+    n1, n2 = P.balanced_split(2**20, cap=256)
+    assert n2 <= 256 and n1 * n2 == 2**20
+
+
+def test_non_pow2_rejected():
+    with pytest.raises(ValueError):
+        P.plan_fft(48)
+    with pytest.raises(ValueError):
+        P.balanced_split(0)
+
+
+def test_vmem_budget_respected():
+    for n in (2048, 65536):
+        p = P.plan_fft(n).leaf_passes[-1]
+        bt = P.pick_batch_tile(p)
+        assert bt >= 1
+        assert P.vmem_bytes(p, bt) <= 8 * 1024 * 1024 or bt == 1
+
+
+def test_describe_smoke():
+    s = P.describe(2**18)
+    assert "2 HBM round trip" in s

@@ -1,0 +1,63 @@
+"""int8 KV-cache decode: equivalence within quantization tolerance."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+CFG = ModelConfig(
+    family="dense", num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256,
+)
+
+
+def _decode_errs(cfg, S=16, Sp=10):
+    params, _ = M.init_unzipped(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, cfg.vocab_size)
+    full_logits, _ = M.logits_fn(params, {"tokens": toks}, cfg)
+    lp, caches = M.prefill(params, {"tokens": toks[:, :Sp]}, cfg)
+    caches = M.prepare_decode_caches(caches, cfg, Sp, S)
+    errs = []
+    for t in range(Sp, S):
+        lg, caches = M.decode_step(
+            params, toks[:, t], caches, jnp.asarray(t, jnp.int32), cfg
+        )
+        errs.append(float(jnp.abs(lg - full_logits[:, t]).max()))
+    scale = float(jnp.abs(full_logits).max())
+    return max(errs) / scale, caches
+
+
+def test_int8_cache_close_to_exact():
+    cfg = dataclasses.replace(CFG, kv_cache_dtype="int8")
+    rel, caches = _decode_errs(cfg)
+    assert rel < 0.03, rel
+    # cache really is int8 + scales
+    kv = caches[0]
+    assert kv.k.dtype == jnp.int8 and kv.v.dtype == jnp.int8
+    assert kv.k_scale is not None and kv.k_scale.dtype == jnp.float32
+
+
+def test_int8_cache_halves_bytes():
+    # realistic head dim so the per-token scale overhead is negligible
+    cfg = dataclasses.replace(CFG, head_dim=128)
+    bf = M.cache_init(cfg, 2, 64)
+    i8 = M.cache_init(dataclasses.replace(cfg, kv_cache_dtype="int8"), 2, 64)
+    nbytes = lambda c: sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c))
+    assert nbytes(i8) < 0.6 * nbytes(bf)
+
+
+def test_int8_windowed_cache_decodes():
+    cfg = dataclasses.replace(
+        CFG, sliding_window=6, kv_cache_dtype="int8"
+    )
+    rel, _ = _decode_errs(cfg)
+    assert rel < 0.03, rel
+
+
+def test_bf16_path_unchanged():
+    rel, _ = _decode_errs(CFG)
+    assert rel < 1e-3, rel

@@ -1,0 +1,81 @@
+"""Fault-tolerance runtime: watchdog, retries, straggler stats, serving."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.runtime.fault_tolerance import StepWatchdog, StragglerStats, with_retries
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.sampling import sample
+
+
+def test_watchdog_fires_on_hang():
+    fired = []
+    wd = StepWatchdog(0.15, on_timeout=lambda: fired.append(1))
+    wd.arm()
+    time.sleep(0.5)
+    wd.close()
+    assert fired
+
+
+def test_watchdog_disarm_prevents_fire():
+    fired = []
+    wd = StepWatchdog(0.2, on_timeout=lambda: fired.append(1))
+    wd.arm()
+    wd.disarm()
+    time.sleep(0.5)
+    wd.close()
+    assert not fired
+
+
+def test_with_retries_recovers():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient device error")
+        return "ok"
+
+    assert with_retries(flaky, retries=3, backoff_s=0.01) == "ok"
+    assert len(calls) == 3
+
+
+def test_with_retries_exhausts():
+    def always_fails():
+        raise RuntimeError("dead")
+
+    with pytest.raises(RuntimeError):
+        with_retries(always_fails, retries=2, backoff_s=0.01)
+
+
+def test_straggler_stats():
+    st = StragglerStats(threshold=2.0)
+    for _ in range(10):
+        st.record(1.0)
+    assert st.record(5.0) is True
+    assert st.flagged == 1
+    assert 0.9 < st.ewma < 1.6
+
+
+def test_sampling_greedy_and_topk():
+    logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
+    assert int(sample(jax.random.PRNGKey(0), logits)[0]) == 1
+    tok = sample(jax.random.PRNGKey(0), logits, temperature=1.0, top_k=2)
+    assert int(tok[0]) in (1, 2)
+
+
+def test_engine_generates_and_stops_at_eos():
+    cfg = ModelConfig(
+        family="dense", num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=64, vocab_size=64,
+    )
+    params, _ = M.init_unzipped(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, ServeConfig(max_new=6))
+    out = eng.generate(jnp.ones((2, 8), jnp.int32) * 5)
+    assert out.shape == (2, 6)
+    assert out.dtype == jnp.int32

@@ -1,0 +1,88 @@
+"""End-to-end system behaviour: train → checkpoint → kill → resume → serve,
+plus config-registry and dry-run plumbing sanity."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LM_SHAPES, TrainConfig, get_config, list_archs, shapes_for
+from repro.configs.reduce import make_reduced
+from repro.configs.specs import decode_state_specs, input_specs
+
+
+def test_registry_covers_assignment():
+    archs = list_archs()
+    for required in (
+        "gemma3-12b", "h2o-danube-1.8b", "yi-6b", "phi4-mini-3.8b",
+        "arctic-480b", "deepseek-moe-16b", "musicgen-large", "xlstm-125m",
+        "zamba2-2.7b", "qwen2-vl-72b", "fftbench",
+    ):
+        assert required in archs
+
+
+def test_assignment_dimensions_exact():
+    g = get_config("gemma3-12b")
+    assert (g.num_layers, g.d_model, g.num_heads, g.num_kv_heads) == (48, 3840, 16, 8)
+    assert (g.d_ff, g.vocab_size) == (15360, 262144)
+    a = get_config("arctic-480b")
+    assert (a.num_layers, a.d_model, a.num_heads, a.num_kv_heads) == (35, 7168, 56, 8)
+    assert (a.num_experts, a.top_k, a.moe_dense_residual) == (128, 2, True)
+    d = get_config("deepseek-moe-16b")
+    assert (d.num_experts, d.top_k, d.num_shared_experts) == (64, 6, 2)
+    q = get_config("qwen2-vl-72b")
+    assert (q.num_layers, q.d_model, q.vocab_size) == (80, 8192, 152064)
+    z = get_config("zamba2-2.7b")
+    assert z.ssm_state == 64 and z.d_model == 2560
+    x = get_config("xlstm-125m")
+    assert x.d_model == 768 and x.d_ff == 0
+
+
+def test_long500k_gating_matches_design():
+    runs_long = {a for a in list_archs()
+                 if a != "fftbench" and any(s.name == "long_500k" for s in shapes_for(a))}
+    assert runs_long == {"gemma3-12b", "h2o-danube-1.8b", "xlstm-125m", "zamba2-2.7b"}
+
+
+def test_input_specs_shapes():
+    cfg = get_config("yi-6b")
+    sp = input_specs(cfg, LM_SHAPES["train_4k"])
+    assert sp["tokens"].shape == (256, 4096)
+    assert sp["targets"].dtype == jnp.int32
+    cfg_a = get_config("musicgen-large")
+    sp = input_specs(cfg_a, LM_SHAPES["prefill_32k"])
+    assert sp["frame_embeds"].shape == (32, 32768, 2048)
+    cfg_v = get_config("qwen2-vl-72b")
+    sp = input_specs(cfg_v, LM_SHAPES["train_4k"])
+    assert sp["mrope_positions"].shape == (256, 3, 4096)
+    assert sp["vision_embeds"].shape[1] == 1024
+
+
+def test_decode_specs_build_without_allocation():
+    cfg = make_reduced(get_config("zamba2-2.7b"))
+    tok, caches, t = decode_state_specs(cfg, LM_SHAPES["decode_32k"])
+    assert tok.shape == (128,)
+    # every leaf is an abstract ShapeDtypeStruct, nothing allocated
+    for leaf in jax.tree.leaves(caches):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_train_kill_resume_end_to_end(tmp_path):
+    """The crash-only contract: losses after resume match an uninterrupted run."""
+    from repro.launch.train import main as train_main
+
+    args = [
+        "--arch", "xlstm-125m", "--reduced", "--batch", "2", "--seq", "32",
+        "--ckpt-every", "5", "--ckpt-dir", str(tmp_path),
+    ]
+    full = train_main(args + ["--steps", "10"])
+    # fresh dir: crash after step 5 (same 10-step schedule), then resume
+    import shutil
+
+    shutil.rmtree(tmp_path)
+    os.makedirs(tmp_path)
+    train_main(args + ["--steps", "10", "--stop-at", "5"])
+    resumed = train_main(args + ["--steps", "10"])
+    np.testing.assert_allclose(full[5:], resumed, atol=2e-3)
