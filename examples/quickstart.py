@@ -1,4 +1,4 @@
-"""Quickstart: the memory-optimized FFT public API in five minutes.
+"""Quickstart: the plan-and-execute FFT API in five minutes.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,26 +15,44 @@ from repro.core.conv import fft_conv
 for n in (1024, 65536, 2**20):
     print(plan.describe(n))
 
-# ---- 2. complex FFT, three backends ---------------------------------------
+# ---- 2. plan-and-execute: resolve a spec once, run it many times ----------
 x = (np.random.randn(4, 4096) + 1j * np.random.randn(4, 4096)).astype(np.complex64)
-for backend in ("stockham", "xla", "pallas"):  # pallas runs interpret on CPU
-    y = F.fft(jnp.asarray(x), backend=backend)
+spec = F.FFTSpec(n=4096, kind="fft", batch_hint=4)
+planned = F.plan(spec)                  # cached: F.plan(spec) is F.plan(spec)
+print(f"planned: {planned.describe()}  tiles={dict(planned.batch_tiles)}")
+y = planned(jnp.asarray(x))
+print("max err vs numpy:", float(np.abs(np.asarray(y) - np.fft.fft(x)).max()))
+
+# ---- 3. the backend registry: every registered backend runs the same plan --
+for backend in F.available_backends():   # pallas runs interpret on CPU
+    y = F.plan(spec, backend=backend)(jnp.asarray(x))
     err = np.abs(np.asarray(y) - np.fft.fft(x)).max()
     print(f"backend={backend:9s} max err vs numpy: {err:.2e}")
 
-# ---- 3. real FFT (half the work for real signals) --------------------------
+# ---- 4. scoped backend selection (the deprecated global setter's successor) -
+with F.use_backend("stockham"):
+    y = F.fft(jnp.asarray(x))            # wrappers are plan-cached too
+    print("use_backend('stockham') err:",
+          float(np.abs(np.asarray(y) - np.fft.fft(x)).max()))
+
+# ---- 5. axis-aware transforms (no manual swapaxes) -------------------------
+xa = (np.random.randn(8, 1024, 3) + 1j * np.random.randn(8, 1024, 3)).astype(np.complex64)
+ya = F.fft(jnp.asarray(xa), axis=1)
+print("axis=1 err:", float(np.abs(np.asarray(ya) - np.fft.fft(xa, axis=1)).max()))
+
+# ---- 6. real FFT (half the work for real signals) --------------------------
 sig = np.random.randn(2, 8192).astype(np.float32)
 Xr, Xi = F.rfft(jnp.asarray(sig))
 print("rfft bins:", Xr.shape, " roundtrip err:",
       float(jnp.abs(F.irfft((Xr, Xi), 8192) - sig).max()))
 
-# ---- 4. FFT long convolution (the LM-layer integration) --------------------
+# ---- 7. FFT long convolution (the LM-layer integration) --------------------
 u = np.random.randn(1, 16, 2048).astype(np.float32)   # (B, D, L)
 h = np.random.randn(16, 2048).astype(np.float32)      # per-channel filters
 y = fft_conv(jnp.asarray(u), jnp.asarray(h))
 print("fft_conv out:", y.shape)
 
-# ---- 5. under jit, composed with autodiff ----------------------------------
+# ---- 8. under jit, composed with autodiff ----------------------------------
 g = jax.grad(lambda v: jnp.sum(jnp.abs(F.fft(v)) ** 2))(jnp.asarray(x))
 print("grad of spectral energy == 2N·conj(x):",
       bool(jnp.allclose(g, 2 * 4096 * jnp.conj(jnp.asarray(x)), rtol=1e-3)))

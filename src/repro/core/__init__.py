@@ -4,23 +4,29 @@ Layers:
   twiddle      precomputed LUTs (texture-memory analogue)
   plan         HBM-round-trip schedule (kernel-call count analogue)
   fft_xla      pure-JAX Stockham + four-step backends
-  fft          public API with backend dispatch (pallas | xla | stockham)
+  fft          plan-and-execute public API (FFTSpec → plan() → PlannedFFT)
+               over a capability-negotiated backend registry
   conv         FFT-based long convolution (LM integration point)
   distributed  pencil FFT over mesh axes (pod-scale all-to-all schedule)
 """
 
 from repro.core import conv, distributed, fft, fft_xla, plan, twiddle
 from repro.core.conv import fft_conv
-from repro.core.fft import fft as fft_fn
 from repro.core.fft import (
+    FFTSpec,
+    PlannedFFT,
+    available_backends,
     default_backend,
     fft2,
     ifft,
     ifft2,
     irfft,
+    register_backend,
     rfft,
-    set_default_backend,
+    use_backend,
 )
+from repro.core.fft import fft as fft_fn
+from repro.core.fft import plan as plan_transform
 from repro.core.plan import FFTPlan, plan_fft
 
 __all__ = [
@@ -37,8 +43,13 @@ __all__ = [
     "ifft2",
     "irfft",
     "rfft",
+    "FFTSpec",
+    "PlannedFFT",
+    "plan_transform",
+    "register_backend",
+    "available_backends",
+    "use_backend",
     "default_backend",
-    "set_default_backend",
     "FFTPlan",
     "plan_fft",
 ]

@@ -37,30 +37,38 @@ def fft_conv(
     h: jax.Array,
     *,
     causal: bool = True,
+    axis: int = -1,
     backend: str | None = None,
 ) -> jax.Array:
-    """Causal convolution of ``x`` (..., L) with filter ``h`` (..., Lh).
+    """Causal convolution of ``x`` with filter ``h`` along ``axis``.
 
     Zero-pads to the next power of two ≥ L + Lh - 1 (linear, not circular,
-    convolution), transforms with the repo FFT, multiplies spectra, inverts,
-    and truncates to the first L samples (causal) — the standard overlap-free
-    long-conv used by Hyena/S4 layers.
+    convolution), transforms through cached :class:`PlannedFFT` handles
+    (rfft forward, irfft inverse — one plan pair per padded length),
+    multiplies spectra, and truncates to the first L samples (causal) — the
+    standard overlap-free long-conv used by Hyena/S4 layers.
 
-    ``h`` broadcasts against ``x`` over leading dims (e.g. per-channel
-    filters of shape (D, Lh) against activations (B, D, L)).
+    ``h`` is indexed over its *last* axis and broadcasts against ``x`` with
+    the convolution axis moved last (e.g. per-channel filters of shape
+    (D, Lh) against activations (B, D, L), or (B, S, D) with ``axis=1``).
     """
+    if axis != -1:
+        x = jnp.moveaxis(x, axis, -1)
     L = x.shape[-1]
     Lh = h.shape[-1]
     n = next_pow2(L + Lh - 1)
+    fwd = fft_lib.plan(fft_lib.FFTSpec(n=n, kind="rfft"), backend=backend)
+    inv = fft_lib.plan(fft_lib.FFTSpec(n=n, kind="irfft"), backend=backend)
     xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n - L)])
     hp = jnp.pad(h, [(0, 0)] * (h.ndim - 1) + [(0, n - Lh)])
-    Xr, Xi = fft_lib.rfft(xp, backend=backend)
-    Hr, Hi = fft_lib.rfft(hp, backend=backend)
+    Xr, Xi = fwd(xp)
+    Hr, Hi = fwd(hp)
     Yr, Yi = cmul(Xr, Xi, Hr, Hi)
-    y = fft_lib.irfft((Yr, Yi), n, backend=backend)
-    if causal:
-        return y[..., :L]
-    return y[..., : L + Lh - 1]
+    y = inv((Yr, Yi))
+    y = y[..., :L] if causal else y[..., : L + Lh - 1]
+    if axis != -1:
+        y = jnp.moveaxis(y, -1, axis)
+    return y
 
 
 def toeplitz_conv_ref(x: np.ndarray, h: np.ndarray) -> np.ndarray:
@@ -97,18 +105,21 @@ def fft_conv_packed(
     xi = x[..., 1::2, :]
     Lh = h.shape[-1]
     n = next_pow2(L + Lh - 1)
+    fwd = fft_lib.plan(fft_lib.FFTSpec(n=n, kind="fft"), backend=backend)
+    inv = fft_lib.plan(fft_lib.FFTSpec(n=n, kind="ifft"), backend=backend)
+    rfwd = fft_lib.plan(fft_lib.FFTSpec(n=n, kind="rfft"), backend=backend)
     pad = [(0, 0)] * (xr.ndim - 1) + [(0, n - L)]
     zr, zi = jnp.pad(xr, pad), jnp.pad(xi, pad)
-    Zr, Zi = fft_lib.fft((zr, zi), backend=backend)
+    Zr, Zi = fwd((zr, zi))
     hp = jnp.pad(h, [(0, 0)] * (h.ndim - 1) + [(0, n - Lh)])
-    Hr, Hi = fft_lib.rfft(hp, backend=backend)
+    Hr, Hi = rfwd(hp)
     # full-length hermitian extension of the real filter's spectrum
     m = n // 2
     idx = (n - jnp.arange(n)) % n
     Hr_f = jnp.concatenate([Hr, Hr[..., 1:m][..., ::-1]], axis=-1)
     Hi_f = jnp.concatenate([Hi, -Hi[..., 1:m][..., ::-1]], axis=-1)
     Yr, Yi = cmul(Zr, Zi, Hr_f, Hi_f)
-    yr, yi = fft_lib.ifft((Yr, Yi), backend=backend)
+    yr, yi = inv((Yr, Yi))
     out = jnp.stack([yr, yi], axis=-2).reshape(*lead, twob, n)
     if causal:
         return out[..., :L]

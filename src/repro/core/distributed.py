@@ -8,8 +8,9 @@ factored N = N1 · N2 (both divisible by D) and executed as:
     a2a-transpose → local FFT(N1) → twiddle → a2a-transpose → local FFT(N2)
     [→ a2a-transpose for natural output order]
 
-Every local FFT goes through :mod:`repro.core.fft` (i.e. the fused kernels on
-TPU), and the per-device twiddle slab is generated with traced iota from
+Every local FFT executes a per-leaf :class:`~repro.core.fft.PlannedFFT` (one
+frozen plan per pencil factor, fused kernels on TPU), and the per-device
+twiddle slab is generated with traced iota from
 ``lax.axis_index`` — no device ever materialises another shard's table.
 
 Beyond-paper optimisation (recorded in EXPERIMENTS.md §Perf): with
@@ -38,7 +39,26 @@ from repro.core.fft_xla import cmul
 
 Planes = Tuple[jax.Array, jax.Array]
 
-__all__ = ["pfft", "pifft", "pencil_factors", "pfft_sharded", "pifft_sharded"]
+__all__ = [
+    "pfft",
+    "pifft",
+    "pencil_factors",
+    "pfft_sharded",
+    "pifft_sharded",
+    "shard_map_compat",
+]
+
+
+def _leaf_plan(n: int, inverse: bool, backend: str | None) -> "fft_lib.PlannedFFT":
+    """Per-leaf :class:`PlannedFFT` for the local pencil transforms.
+
+    Each pencil factor gets its own plan (cached by spec), so the local
+    length-n1 and length-n2 passes reuse frozen schedules and LUTs instead of
+    re-dispatching on a backend string per call.
+    """
+    return fft_lib.plan(
+        fft_lib.FFTSpec(n=n, kind="ifft" if inverse else "fft"), backend=backend
+    )
 
 
 def pencil_factors(n: int, d: int) -> tuple[int, int]:
@@ -94,8 +114,9 @@ def pfft(
     lead = xr.shape[:-1]
     la = len(lead)  # number of leading batch axes
 
-    def rows_fft(ar, ai, inv):
-        return fft_lib._dispatch(ar, ai, inv, backend)
+    # Per-leaf plans: the n1 and n2 local passes each reuse a frozen schedule.
+    plan_n1 = _leaf_plan(n1, inverse, backend)
+    plan_n2 = _leaf_plan(n2, inverse, backend)
 
     # Local shard is rows [d·p, (d+1)·p) of the (n1, n2) matrix.
     xr = xr.reshape(*lead, p, n2)
@@ -105,7 +126,7 @@ def pfft(
     xi = _a2a(xi, axis_name, la + 1, la)
     # (2) FFT over n1 (axis -2): swap to put it last.
     xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (q, n1)
-    xr, xi = rows_fft(xr, xi, inverse)
+    xr, xi = plan_n1.apply_planes(xr, xi)
     # (3) twiddle in (q, n1)^T layout.
     twr, twi = _local_twiddle(n1, n2, q, axis_name, inverse)  # (n1, q)
     xr, xi = cmul(xr, xi, twr.T, twi.T)
@@ -116,7 +137,7 @@ def pfft(
     # after split on rows (n1 → d·p) and concat on cols: (p, n2) with full rows.
     # (5) FFT over n2 (last axis, local).  (For inverse=True the two leaf
     # transforms already contribute 1/n1 · 1/n2 = 1/n scaling.)
-    xr, xi = rows_fft(xr, xi, inverse)
+    xr, xi = plan_n2.apply_planes(xr, xi)
     if not natural_order:
         return xr.reshape(*lead, p * n2), xi.reshape(*lead, p * n2)
     # (6) a2a transpose → natural order: C (p, n2) → C^T slab (q2, n1).
@@ -150,8 +171,8 @@ def pifft(
     lead = xr.shape[:-1]
     la = len(lead)
 
-    def rows_fft(ar, ai):
-        return fft_lib._dispatch(ar, ai, True, backend)
+    plan_n1 = _leaf_plan(n1, inverse=True, backend=backend)
+    plan_n2 = _leaf_plan(n2, inverse=True, backend=backend)
 
     if not from_pencil:
         # Natural order: device holds C^T rows (q, n1); transpose to pencil.
@@ -167,7 +188,7 @@ def pifft(
         xr = xr.reshape(*lead, p, n2)
         xi = xi.reshape(*lead, p, n2)
     # Mirror of pfft: inverse FFT over n2 (rows, local)...
-    xr, xi = rows_fft(xr, xi)
+    xr, xi = plan_n2.apply_planes(xr, xi)
     # a2a to column slabs: (p, n2) → (n1, q)
     xr = _a2a(xr, axis_name, la + 1, la)
     xi = _a2a(xi, axis_name, la + 1, la)
@@ -175,7 +196,7 @@ def pifft(
     twr, twi = _local_twiddle(n1, n2, q, axis_name, inverse=True)  # (n1, q)
     xr, xi = cmul(xr, xi, twr, twi)
     xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (q, n1)
-    xr, xi = rows_fft(xr, xi)
+    xr, xi = plan_n1.apply_planes(xr, xi)
     # back to block layout over the original axis: (q, n1) → (p, n2) rows.
     xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (n1, q)
     xr = _a2a(xr, axis_name, la, la + 1)  # (p, n2)
@@ -207,17 +228,17 @@ def pfft2d(
     lead = xr.shape[:-2]
     la = len(lead)
 
-    def rows_fft(ar, ai):
-        return fft_lib._dispatch(ar, ai, inverse, backend)
+    plan_rows = _leaf_plan(n2, inverse, backend)
+    plan_cols = _leaf_plan(n1, inverse, backend)
 
     # (1) row FFTs over n2 — local and contiguous.
-    xr, xi = rows_fft(xr, xi)
+    xr, xi = plan_rows.apply_planes(xr, xi)
     # (2) a2a transpose: (p, n2) → (n1, q) column slabs.
     xr = _a2a(xr, axis_name, la + 1, la)
     xi = _a2a(xi, axis_name, la + 1, la)
     # (3) column FFTs over n1: swap to last axis, transform, swap back.
     xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (q, n1)
-    xr, xi = rows_fft(xr, xi)
+    xr, xi = plan_cols.apply_planes(xr, xi)
     xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (n1, q)
     # (4) a2a back to row slabs (p, n2).
     xr = _a2a(xr, axis_name, la, la + 1)
@@ -225,19 +246,29 @@ def pfft2d(
     return xr, xi
 
 
-def _shard_wrap(fn, mesh: Mesh, axis: str):
-    from jax import shard_map
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """Version-tolerant shard_map: ``jax.shard_map``/``check_vma`` on new JAX,
+    ``jax.experimental.shard_map``/``check_rep`` on older releases (including
+    the window where ``jax.shard_map`` exists but still takes ``check_rep``)."""
+    try:
+        from jax import shard_map as sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
 
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def _shard_wrap(fn, mesh: Mesh, axis: str):
     def wrapper(xr, xi, **kw):
         nbatch = xr.ndim - 1
         pspec = P(*([None] * nbatch + [axis]))
         f = functools.partial(fn, axis_name=axis, **kw)
-        return shard_map(
-            f,
-            mesh=mesh,
-            in_specs=(pspec, pspec),
-            out_specs=(pspec, pspec),
-            check_vma=False,
+        return shard_map_compat(
+            f, mesh, in_specs=(pspec, pspec), out_specs=(pspec, pspec)
         )(xr, xi)
 
     return wrapper

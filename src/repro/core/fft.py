@@ -1,56 +1,301 @@
-"""Public FFT API — backend dispatch over the paper's algorithm.
+"""Public FFT API — plan-and-execute over a backend registry.
+
+The paper's core idea is that the transform *schedule* (kernel-call count,
+memory-tier placement, LUT reuse — §2.3, §3) is decided once per size and
+reused.  This module exposes that as a plan-and-execute API in the FFTW /
+cuFFT mold:
+
+    spec    = FFTSpec(n=4096, kind="fft", axis=-1)
+    planned = plan(spec)             # cached: plan(spec) is plan(spec)
+    y       = planned(x)             # executes the frozen schedule
+
+:func:`plan` resolves an :class:`FFTSpec` (length, kind, axis, precision,
+batch hint) into a hashable :class:`PlannedFFT` executor carrying the
+:class:`repro.core.plan.FFTPlan` schedule, pre-materialized twiddle/DFT LUTs,
+the chosen per-leaf batch tiles, and a backend selected from the **backend
+registry**.
 
 Backends
 --------
+Backends are registered entries (:func:`register_backend`), not an if/elif
+chain.  Each declares capabilities (platforms, precisions, max length) and
+selection is by capability negotiation against the running platform unless a
+name is forced per call or scoped with the :func:`use_backend` context
+manager.  Built-in entries:
+
 ``pallas``    fused Pallas TPU kernels (``repro.kernels``), one HBM round trip
               per plan level.  Runs under ``interpret=True`` on CPU.
 ``xla``       pure-JAX four-step with the same factorisation (MXU matmuls on
-              TPU, portable everywhere).  Default on CPU.
+              TPU, portable everywhere).  Preferred on CPU/GPU.
 ``stockham``  radix-2 butterfly reference (the paper's original formulation).
 
-All functions accept either a complex array or a ``(real, imag)`` tuple of
-float32 planes, and return whichever form was supplied.  Transform axis is
-always the last one; move axes outside (cheap under jit) if needed.
+Module functions ``fft/ifft/rfft/irfft/fft2/ifft2`` remain as thin
+plan-cached wrappers (each call re-uses the cached :class:`PlannedFFT`); the
+1-D kinds grow an ``axis=`` argument for transforms over a non-last axis,
+while the 2-D kinds always transform the last two axes.
+
+All complex transforms accept either a complex array or a ``(real, imag)``
+tuple of float32 planes, and return whichever form was supplied.
 """
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+import functools
 import os
-from typing import Tuple, Union
+import threading
+import types
+import warnings
+from typing import Callable, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fft_xla
+from repro.core import plan as plan_lib
 from repro.core import twiddle as tw
 
 Planes = Tuple[jax.Array, jax.Array]
 ArrayOrPlanes = Union[jax.Array, Planes]
 
 __all__ = [
+    "FFTSpec",
+    "PlannedFFT",
+    "plan",
+    "BackendCapabilities",
+    "register_backend",
+    "available_backends",
+    "get_backend",
+    "use_backend",
+    "default_backend",
     "fft",
     "ifft",
     "rfft",
     "irfft",
     "fft2",
     "ifft2",
-    "default_backend",
-    "set_default_backend",
 ]
 
-_DEFAULT_BACKEND = os.environ.get("REPRO_FFT_BACKEND", "xla")
+KINDS = ("fft", "ifft", "rfft", "irfft", "fft2", "ifft2")
+_COMPLEX_KINDS = ("fft", "ifft")
 
 
-def default_backend() -> str:
-    return _DEFAULT_BACKEND
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
 
 
-def set_default_backend(name: str) -> None:
-    global _DEFAULT_BACKEND
-    if name not in ("pallas", "xla", "stockham"):
-        raise ValueError(f"unknown FFT backend {name!r}")
-    _DEFAULT_BACKEND = name
+# ---------------------------------------------------------------------------
+# FFTSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTSpec:
+    """What to transform — the hashable key a :class:`PlannedFFT` is built for.
+
+    n:          transform length along ``axis`` (power of two).  For
+                ``irfft`` this is the *output* signal length; for ``fft2``/
+                ``ifft2`` the last-axis length (``n2`` is the second-to-last).
+    kind:       'fft' | 'ifft' | 'rfft' | 'irfft' | 'fft2' | 'ifft2'.
+    axis:       transform axis (2-D kinds always use the last two axes).
+    precision:  compute precision of the planes ('float32' for now; the field
+                exists so mixed-precision plans slot in without an API break).
+    batch_hint: expected batch rows, used to cap the kernel batch tile so a
+                small batch is not padded up to the VMEM-optimal tile.
+    n2:         second-to-last-axis length, 2-D kinds only.
+    """
+
+    n: int
+    kind: str = "fft"
+    axis: int = -1
+    precision: str = "float32"
+    batch_hint: Optional[int] = None
+    n2: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown FFT kind {self.kind!r}; one of {KINDS}")
+        if not _is_pow2(self.n):
+            raise ValueError(f"FFT length must be a power of two, got {self.n}")
+        if self.kind in ("rfft", "irfft") and self.n < 2:
+            raise ValueError(f"{self.kind} length must be >= 2, got {self.n}")
+        if self.kind in ("fft2", "ifft2"):
+            if self.n2 is None or not _is_pow2(self.n2):
+                raise ValueError(
+                    f"{self.kind} needs a power-of-two n2, got {self.n2}"
+                )
+            if self.axis != -1:
+                raise ValueError(f"{self.kind} always transforms the last two axes")
+        elif self.n2 is not None:
+            raise ValueError(f"n2 is only meaningful for fft2/ifft2")
+        if self.batch_hint is not None and self.batch_hint < 1:
+            raise ValueError(f"batch_hint must be >= 1, got {self.batch_hint}")
+
+
+# ---------------------------------------------------------------------------
+# Backend registry + capability negotiation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a backend can run, consulted during plan-time negotiation.
+
+    platforms:           JAX platforms the backend runs on at all.
+    preferred_platforms: platforms where it should win negotiation (scored
+                         above plain support).
+    precisions:          plane precisions it implements.
+    max_n:               largest supported transform length (None = unbounded).
+    priority:            tie-break between equally-capable backends.
+    """
+
+    platforms: frozenset = frozenset({"cpu", "gpu", "tpu"})
+    preferred_platforms: frozenset = frozenset()
+    precisions: frozenset = frozenset({"float32"})
+    max_n: Optional[int] = None
+    priority: int = 10
+
+    def supports(self, spec: FFTSpec, platform: str) -> bool:
+        if platform not in self.platforms:
+            return False
+        if spec.precision not in self.precisions:
+            return False
+        if self.max_n is not None and max(spec.n, spec.n2 or 0) > self.max_n:
+            return False
+        return True
+
+    def score(self, platform: str) -> int:
+        return self.priority + (100 if platform in self.preferred_platforms else 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered executor: transforms the last axis of split planes."""
+
+    name: str
+    fn: Callable  # (xr, xi, *, inverse: bool, planned: PlannedFFT) -> Planes
+    capabilities: BackendCapabilities
+
+
+_REGISTRY: dict = {}
+
+
+def register_backend(
+    name: str,
+    fn: Callable,
+    capabilities: BackendCapabilities | None = None,
+    *,
+    overwrite: bool = False,
+) -> Backend:
+    """Register ``fn`` as FFT backend ``name``.
+
+    ``fn(xr, xi, *, inverse, planned)`` must transform the last axis of the
+    split float32 planes, following ``planned.fft_plan``'s schedule (or its
+    own, for reference backends).  Registering an existing name requires
+    ``overwrite=True`` so a typo cannot silently shadow a built-in.
+    """
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"FFT backend {name!r} is already registered")
+    entry = Backend(name, fn, capabilities or BackendCapabilities())
+    _REGISTRY[name] = entry
+    # Existing cached plans may have negotiated without this entry (or hold a
+    # stale fn under overwrite=True) — re-resolve on next plan().
+    _plan_cached.cache_clear()
+    return entry
+
+
+def available_backends() -> tuple:
+    """Registered backend names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown FFT backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+def _negotiate(spec: FFTSpec, platform: str) -> Backend:
+    best = None
+    for entry in _REGISTRY.values():
+        if not entry.capabilities.supports(spec, platform):
+            continue
+        if best is None or entry.capabilities.score(platform) > best.capabilities.score(
+            platform
+        ):
+            best = entry
+    if best is None:
+        raise ValueError(
+            f"no registered FFT backend supports {spec} on platform {platform!r}"
+        )
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Default-backend scoping
+# ---------------------------------------------------------------------------
+
+_GLOBAL_DEFAULT: Optional[str] = os.environ.get("REPRO_FFT_BACKEND") or None
+_scope = threading.local()
+
+
+def _scope_stack() -> list:
+    stack = getattr(_scope, "stack", None)
+    if stack is None:
+        stack = _scope.stack = []
+    return stack
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scope the default FFT backend: ``with use_backend('stockham'): ...``.
+
+    Nested scopes stack; the previous default is restored on exit even when
+    the body raises.  The name is validated against the registry on entry.
+    """
+    get_backend(name)  # fail fast on unknown names
+    stack = _scope_stack()
+    stack.append(name)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def default_backend() -> Optional[str]:
+    """The backend name new plans will use absent a per-call ``backend=``.
+
+    Innermost :func:`use_backend` scope, else the ``REPRO_FFT_BACKEND``
+    environment override, else None — meaning capability negotiation picks
+    per plan (xla on CPU/GPU, pallas on TPU).
+    """
+    stack = _scope_stack()
+    if stack:
+        return stack[-1]
+    return _GLOBAL_DEFAULT
+
+
+def set_default_backend(name: str) -> None:  # deprecated shim
+    """Deprecated: use :func:`use_backend` (scoped) instead."""
+    warnings.warn(
+        "set_default_backend is deprecated; use the use_backend() context "
+        "manager (scoped) or pass backend= to plan()",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    global _GLOBAL_DEFAULT
+    get_backend(name)
+    _GLOBAL_DEFAULT = name
+
+
+# ---------------------------------------------------------------------------
+# Planes helpers
+# ---------------------------------------------------------------------------
 
 
 def _split(x: ArrayOrPlanes) -> tuple[jax.Array, jax.Array, bool]:
@@ -74,103 +319,392 @@ def _join(yr, yi, was_complex: bool) -> ArrayOrPlanes:
     return yr, yi
 
 
-def _dispatch(xr, xi, inverse: bool, backend: str | None) -> Planes:
-    backend = backend or _DEFAULT_BACKEND
-    if backend == "stockham":
-        return fft_xla.stockham_fft(xr, xi, inverse=inverse)
-    if backend == "xla":
-        return fft_xla.four_step_fft(xr, xi, inverse=inverse)
-    if backend == "pallas":
+def _input_shape(x: ArrayOrPlanes) -> tuple:
+    if isinstance(x, (tuple, list)):
+        return jnp.shape(x[0])
+    return jnp.shape(x)
+
+
+# ---------------------------------------------------------------------------
+# PlannedFFT
+# ---------------------------------------------------------------------------
+
+
+def _materialize_luts(
+    fft_plan: plan_lib.FFTPlan, inverse: bool, backend_name: str
+) -> tuple:
+    """Host-side LUTs for every leaf pass — the paper's texture-memory tables
+    built at plan time so first execution pays no table construction.
+
+    Warms the exact builder the backend will hit (ops' scaled LUT caches for
+    pallas, the twiddle factory otherwise); the returned references keep the
+    arrays alive for the lifetime of the plan."""
+    luts = []
+    if backend_name == "pallas":
         from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
 
-        return kernel_ops.fft(xr, xi, inverse=inverse)
-    raise ValueError(f"unknown FFT backend {backend!r}")
+        for p in fft_plan.leaf_passes:
+            if p.kind == "direct":
+                luts.append(kernel_ops._direct_luts(p.n, inverse))
+            else:
+                luts.append(kernel_ops._fused_luts(p.n1, p.n2, inverse))
+        return tuple(luts)
+    for p in fft_plan.leaf_passes:
+        if p.kind == "direct":
+            luts.append(tw.dft_matrix(p.n, inverse))
+        else:
+            luts.append(tw.dft_matrix(p.n1, inverse))
+            luts.append(tw.twiddle_grid(p.n1, p.n2, inverse))
+            luts.append(tw.dft_matrix(p.n2, inverse))
+    return tuple(luts)
 
 
-def fft(x: ArrayOrPlanes, *, backend: str | None = None) -> ArrayOrPlanes:
-    """Complex FFT over the last axis (power-of-two length)."""
-    xr, xi, was_c = _split(x)
-    yr, yi = _dispatch(xr, xi, False, backend)
-    return _join(yr, yi, was_c)
+def _pick_tiles(fft_plan: plan_lib.FFTPlan, batch_hint: Optional[int]) -> tuple:
+    """((leaf_n, batch_tile), ...) — VMEM-budgeted, capped by the batch hint.
 
-
-def ifft(x: ArrayOrPlanes, *, backend: str | None = None) -> ArrayOrPlanes:
-    xr, xi, was_c = _split(x)
-    yr, yi = _dispatch(xr, xi, True, backend)
-    return _join(yr, yi, was_c)
-
-
-def rfft(x: jax.Array, *, backend: str | None = None) -> Planes:
-    """Real FFT via even/odd complex packing — N/2-point complex transform.
-
-    Beyond-paper optimisation: the paper transforms complex signals only; for
-    the real signals of the SAR / long-conv workloads this halves both the
-    arithmetic and — more importantly here — the HBM traffic of the forward
-    transform.  Returns (real, imag) planes of length n//2 + 1.
+    The hint only applies to level-free plans: under a split level each leaf
+    runs with batch × co-factor rows, so capping by the user batch alone
+    would collapse the tile (and explode the kernel grid) on large sizes.
     """
-    x = jnp.asarray(x, jnp.float32)
-    n = x.shape[-1]
-    if n & (n - 1) or n < 2:
-        raise ValueError(f"rfft length must be a power of two >= 2, got {n}")
-    zr = x[..., 0::2]  # even samples  -> real plane
-    zi = x[..., 1::2]  # odd samples   -> imag plane
-    Zr, Zi = _dispatch(zr, zi, False, backend)
-    m = n // 2
-    # Z[-k] with wraparound: index (m - k) mod m.
-    idx = (m - jnp.arange(m)) % m
-    Zr_f, Zi_f = Zr[..., idx], Zi[..., idx]
-    # E[k] = (Z[k] + conj(Z[-k]))/2 ; O[k] = (Z[k] - conj(Z[-k]))/(2i)
-    Er, Ei = (Zr + Zr_f) * 0.5, (Zi - Zi_f) * 0.5
-    Or_, Oi = (Zi + Zi_f) * 0.5, (Zr_f - Zr) * 0.5
-    wr_np, wi_np = tw.rfft_recomb_twiddle(n)
-    wr, wi = jnp.asarray(wr_np)[: m], jnp.asarray(wi_np)[: m]
-    Tr, Ti = fft_xla.cmul(Or_, Oi, wr, wi)
-    Xr, Xi = Er + Tr, Ei + Ti
-    # k = m (Nyquist): X[m] = E[0] - O[0] (real for real input).
-    nyq_r = Er[..., 0:1] - Or_[..., 0:1]
-    nyq_i = Ei[..., 0:1] - Oi[..., 0:1]
-    Xr = jnp.concatenate([Xr, nyq_r], axis=-1)
-    Xi = jnp.concatenate([Xi, nyq_i], axis=-1)
-    return Xr, Xi
+    tiles = []
+    for p in fft_plan.leaf_passes:
+        bt = plan_lib.pick_batch_tile(p)
+        if batch_hint is not None and not fft_plan.levels:
+            cap = 1 << (batch_hint - 1).bit_length()  # next pow2 >= hint
+            bt = max(1, min(bt, cap))
+        tiles.append((p.n, bt))
+    return tuple(tiles)
 
 
-def irfft(x: Planes, n: int, *, backend: str | None = None) -> jax.Array:
+class PlannedFFT:
+    """A frozen, executable transform schedule (the cuFFT/FFTW plan handle).
+
+    Carries the :class:`FFTSpec`, the resolved :class:`Backend`, the
+    :class:`~repro.core.plan.FFTPlan` factorisation, pre-materialized
+    twiddle/DFT LUTs and per-leaf batch tiles.  Calling it runs the
+    transform; instances are hashable and interned by :func:`plan` so
+    ``plan(spec) is plan(spec)``.
+
+    Non-complex kinds (rfft/irfft/fft2/ifft2) hold child PlannedFFT handles
+    for their inner complex transforms, so backends only ever execute plain
+    fft/ifft schedules.
+    """
+
+    def __init__(
+        self,
+        spec: FFTSpec,
+        backend: Backend,
+        fft_plan: Optional[plan_lib.FFTPlan],
+        *,
+        children: tuple = (),
+        luts: tuple = (),
+        batch_tiles: tuple = (),
+    ):
+        self.spec = spec
+        self.backend = backend
+        self.fft_plan = fft_plan
+        self.children = children
+        self.luts = luts
+        self._batch_tiles = dict(batch_tiles)
+
+    # -- identity ----------------------------------------------------------
+
+    def __hash__(self):
+        return hash((self.spec, self.backend.name))
+
+    def __eq__(self, other):
+        return (
+            isinstance(other, PlannedFFT)
+            and self.spec == other.spec
+            and self.backend.name == other.backend.name
+        )
+
+    def __repr__(self):
+        return f"PlannedFFT({self.spec}, backend={self.backend.name!r})"
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def batch_tiles(self) -> Mapping[int, int]:
+        """leaf length → chosen kernel batch tile (read-only: the handle is
+        interned and shared process-wide)."""
+        return types.MappingProxyType(self._batch_tiles)
+
+    @property
+    def hbm_round_trips(self) -> int:
+        plans = [self.fft_plan] if self.fft_plan else [c.fft_plan for c in self.children]
+        return max(p.hbm_round_trips for p in plans)
+
+    def describe(self) -> str:
+        n_main = self.fft_plan.n if self.fft_plan else self.children[0].fft_plan.n
+        return (
+            f"{self.spec.kind} N={self.spec.n} backend={self.backend.name}: "
+            + plan_lib.describe(n_main)
+        )
+
+    # -- execution ---------------------------------------------------------
+
+    def _complex(self, xr, xi, inverse: bool) -> Planes:
+        """Backend-executed complex transform over the last axis."""
+        return self.backend.fn(xr, xi, inverse=inverse, planned=self)
+
+    def _to_last(self, a):
+        return jnp.moveaxis(a, self.spec.axis, -1)
+
+    def _from_last(self, a):
+        return jnp.moveaxis(a, -1, self.spec.axis)
+
+    def apply_planes(self, xr: jax.Array, xi: jax.Array) -> Planes:
+        """Run the planned transform on split float32 planes (axis-aware).
+
+        This is the raw entry point used by the distributed pencil driver and
+        the conv layer; :meth:`__call__` adds complex-array packing on top.
+        """
+        kind = self.spec.kind
+        move = self.spec.axis != -1
+        if move:
+            xr, xi = self._to_last(xr), self._to_last(xi)
+        if kind in _COMPLEX_KINDS:
+            yr, yi = self._complex(xr, xi, inverse=kind == "ifft")
+        elif kind in ("fft2", "ifft2"):
+            yr, yi = self._fft2_planes(xr, xi)
+        else:
+            raise ValueError(f"apply_planes on {kind!r} plan; use __call__")
+        if move:
+            yr, yi = self._from_last(yr), self._from_last(yi)
+        return yr, yi
+
+    def __call__(self, x: ArrayOrPlanes) -> ArrayOrPlanes:
+        kind = self.spec.kind
+        if kind in _COMPLEX_KINDS or kind in ("fft2", "ifft2"):
+            xr, xi, was_c = _split(x)
+            yr, yi = self.apply_planes(xr, xi)
+            return _join(yr, yi, was_c)
+        if kind == "rfft":
+            return self._rfft(x)
+        return self._irfft(x)
+
+    def _fft2_planes(self, xr, xi) -> Planes:
+        rows, cols = self.children
+        xr, xi = rows._complex(xr, xi, inverse=self.spec.kind == "ifft2")
+        xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)
+        xr, xi = cols._complex(xr, xi, inverse=self.spec.kind == "ifft2")
+        return jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)
+
+    def _rfft(self, x: jax.Array) -> Planes:
+        """Real FFT via even/odd complex packing — N/2-point complex transform.
+
+        Beyond-paper optimisation: the paper transforms complex signals only;
+        for the real signals of the SAR / long-conv workloads this halves both
+        the arithmetic and — more importantly here — the HBM traffic of the
+        forward transform.  Returns (real, imag) planes of n//2 + 1 bins.
+        """
+        n = self.spec.n
+        x = jnp.asarray(x, jnp.float32)
+        move = self.spec.axis != -1
+        if move:
+            x = self._to_last(x)
+        if x.shape[-1] != n:
+            raise ValueError(f"rfft planned for n={n}, got axis length {x.shape[-1]}")
+        (inner,) = self.children
+        zr = x[..., 0::2]  # even samples  -> real plane
+        zi = x[..., 1::2]  # odd samples   -> imag plane
+        Zr, Zi = inner._complex(zr, zi, inverse=False)
+        m = n // 2
+        # Z[-k] with wraparound: index (m - k) mod m.
+        idx = (m - jnp.arange(m)) % m
+        Zr_f, Zi_f = Zr[..., idx], Zi[..., idx]
+        # E[k] = (Z[k] + conj(Z[-k]))/2 ; O[k] = (Z[k] - conj(Z[-k]))/(2i)
+        Er, Ei = (Zr + Zr_f) * 0.5, (Zi - Zi_f) * 0.5
+        Or_, Oi = (Zi + Zi_f) * 0.5, (Zr_f - Zr) * 0.5
+        wr_np, wi_np = tw.rfft_recomb_twiddle(n)
+        wr, wi = jnp.asarray(wr_np)[:m], jnp.asarray(wi_np)[:m]
+        Tr, Ti = fft_xla.cmul(Or_, Oi, wr, wi)
+        Xr, Xi = Er + Tr, Ei + Ti
+        # k = m (Nyquist): X[m] = E[0] - O[0] (real for real input).
+        nyq_r = Er[..., 0:1] - Or_[..., 0:1]
+        nyq_i = Ei[..., 0:1] - Oi[..., 0:1]
+        Xr = jnp.concatenate([Xr, nyq_r], axis=-1)
+        Xi = jnp.concatenate([Xi, nyq_i], axis=-1)
+        if move:
+            Xr, Xi = self._from_last(Xr), self._from_last(Xi)
+        return Xr, Xi
+
+    def _irfft(self, x: Planes) -> jax.Array:
+        """Inverse of the rfft packing; output is the length-``n`` real signal."""
+        n = self.spec.n
+        Xr, Xi = x
+        move = self.spec.axis != -1
+        if move:
+            Xr, Xi = self._to_last(Xr), self._to_last(Xi)
+        m = n // 2
+        if Xr.shape[-1] != m + 1:
+            raise ValueError(f"irfft expects n//2+1={m + 1} bins, got {Xr.shape[-1]}")
+        (inner,) = self.children
+        # Reconstruct E and O from X[k], X*[m-k]:
+        idx = m - jnp.arange(m)
+        Xr_k, Xi_k = Xr[..., :m], Xi[..., :m]
+        Xr_f, Xi_f = Xr[..., idx], Xi[..., idx]
+        Er, Ei = (Xr_k + Xr_f) * 0.5, (Xi_k - Xi_f) * 0.5
+        Dr, Di = (Xr_k - Xr_f) * 0.5, (Xi_k + Xi_f) * 0.5
+        wr_np, wi_np = tw.rfft_recomb_twiddle(n, inverse=True)  # e^{+2πik/n}
+        wr, wi = jnp.asarray(wr_np)[:m], jnp.asarray(wi_np)[:m]
+        Or_, Oi = fft_xla.cmul(Dr, Di, wr, wi)
+        # Z = E + i·O
+        Zr = Er - Oi
+        Zi = Ei + Or_
+        zr, zi = inner._complex(Zr, Zi, inverse=True)
+        out = jnp.stack([zr, zi], axis=-1).reshape(*zr.shape[:-1], n)
+        if move:
+            out = self._from_last(out)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# plan()
+# ---------------------------------------------------------------------------
+
+
+def plan(spec: FFTSpec | int, *, backend: Optional[str] = None) -> PlannedFFT:
+    """Resolve ``spec`` into an interned :class:`PlannedFFT` executor.
+
+    ``backend=None`` uses the innermost :func:`use_backend` scope, the
+    ``REPRO_FFT_BACKEND`` env var, or capability negotiation, in that order.
+    Plans are cached: the same (spec, backend, platform) returns the *same*
+    object, so jit tracing of a planned call hits the compilation cache.
+    """
+    if isinstance(spec, int):
+        spec = FFTSpec(n=spec)
+    name = backend if backend is not None else default_backend()
+    return _plan_cached(spec, name, jax.default_backend())
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_cached(spec: FFTSpec, backend_name: Optional[str], platform: str) -> PlannedFFT:
+    if backend_name is None:
+        entry = _negotiate(spec, platform)
+    else:
+        entry = get_backend(backend_name)
+        if not entry.capabilities.supports(spec, platform):
+            raise ValueError(
+                f"backend {entry.name!r} does not support {spec} on {platform!r}"
+            )
+
+    kind = spec.kind
+    if kind in _COMPLEX_KINDS:
+        fft_plan = plan_lib.plan_fft(spec.n)
+        return PlannedFFT(
+            spec,
+            entry,
+            fft_plan,
+            luts=_materialize_luts(fft_plan, kind == "ifft", entry.name),
+            batch_tiles=_pick_tiles(fft_plan, spec.batch_hint),
+        )
+
+    def child(n: int, inverse: bool, batch_hint: Optional[int]) -> PlannedFFT:
+        return _plan_cached(
+            FFTSpec(
+                n=n,
+                kind="ifft" if inverse else "fft",
+                precision=spec.precision,
+                batch_hint=batch_hint,
+            ),
+            entry.name,
+            platform,
+        )
+
+    if kind in ("rfft", "irfft"):
+        # The packed complex transform sees the caller's batch unchanged.
+        inner = child(spec.n // 2, kind == "irfft", spec.batch_hint)
+        luts = (tw.rfft_recomb_twiddle(spec.n, inverse=kind == "irfft"),)
+        return PlannedFFT(spec, entry, None, children=(inner,), luts=luts)
+
+    # fft2 / ifft2: row pass over the last axis (n), column pass over n2.
+    # No batch_hint for the children: each pass's kernel batch is the
+    # caller's batch × the other image dimension, so capping by the caller
+    # batch alone would collapse the tile and explode the kernel grid.
+    inverse = kind == "ifft2"
+    rows = child(spec.n, inverse, None)
+    cols = child(spec.n2, inverse, None)
+    return PlannedFFT(spec, entry, None, children=(rows, cols))
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+
+def _stockham_backend(xr, xi, *, inverse, planned):
+    return fft_xla.stockham_fft(xr, xi, inverse=inverse)
+
+
+def _xla_backend(xr, xi, *, inverse, planned):
+    return fft_xla.four_step_fft(xr, xi, inverse=inverse)
+
+
+def _pallas_backend(xr, xi, *, inverse, planned):
+    from repro.kernels import ops as kernel_ops  # lazy: avoids import cycle
+
+    return kernel_ops.execute_plan(
+        xr, xi, planned.fft_plan, inverse=inverse, batch_tiles=planned.batch_tiles
+    )
+
+
+register_backend(
+    "stockham",
+    _stockham_backend,
+    BackendCapabilities(priority=0),
+)
+register_backend(
+    "xla",
+    _xla_backend,
+    BackendCapabilities(preferred_platforms=frozenset({"cpu", "gpu"})),
+)
+register_backend(
+    "pallas",
+    _pallas_backend,
+    BackendCapabilities(
+        platforms=frozenset({"cpu", "tpu"}),  # cpu = interpret mode
+        preferred_platforms=frozenset({"tpu"}),
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# Plan-cached convenience wrappers (compatibility surface)
+# ---------------------------------------------------------------------------
+
+
+def fft(x: ArrayOrPlanes, *, axis: int = -1, backend: Optional[str] = None) -> ArrayOrPlanes:
+    """Complex FFT over ``axis`` (power-of-two length), via a cached plan."""
+    n = int(_input_shape(x)[axis])
+    return plan(FFTSpec(n=n, kind="fft", axis=axis), backend=backend)(x)
+
+
+def ifft(x: ArrayOrPlanes, *, axis: int = -1, backend: Optional[str] = None) -> ArrayOrPlanes:
+    n = int(_input_shape(x)[axis])
+    return plan(FFTSpec(n=n, kind="ifft", axis=axis), backend=backend)(x)
+
+
+def rfft(x: jax.Array, *, axis: int = -1, backend: Optional[str] = None) -> Planes:
+    """Real FFT: n//2+1 bins over ``axis`` via even/odd complex packing."""
+    n = int(jnp.shape(x)[axis])
+    return plan(FFTSpec(n=n, kind="rfft", axis=axis), backend=backend)(x)
+
+
+def irfft(x: Planes, n: int, *, axis: int = -1, backend: Optional[str] = None) -> jax.Array:
     """Inverse of :func:`rfft`; output is the length-``n`` real signal."""
-    Xr, Xi = x
-    m = n // 2
-    if Xr.shape[-1] != m + 1:
-        raise ValueError(f"irfft expects n//2+1={m + 1} bins, got {Xr.shape[-1]}")
-    # Reconstruct E and O from X[k], X*[m-k]:
-    idx = m - jnp.arange(m)
-    Xr_k, Xi_k = Xr[..., :m], Xi[..., :m]
-    Xr_f, Xi_f = Xr[..., idx], Xi[..., idx]
-    Er, Ei = (Xr_k + Xr_f) * 0.5, (Xi_k - Xi_f) * 0.5
-    Dr, Di = (Xr_k - Xr_f) * 0.5, (Xi_k + Xi_f) * 0.5
-    wr_np, wi_np = tw.rfft_recomb_twiddle(n, inverse=True)  # e^{+2πik/n}
-    wr, wi = jnp.asarray(wr_np)[: m], jnp.asarray(wi_np)[: m]
-    Or_, Oi = fft_xla.cmul(Dr, Di, wr, wi)
-    # Z = E + i·O
-    Zr = Er - Oi
-    Zi = Ei + Or_
-    zr, zi = _dispatch(Zr, Zi, True, backend)
-    out = jnp.stack([zr, zi], axis=-1).reshape(*zr.shape[:-1], n)
-    return out
+    return plan(FFTSpec(n=n, kind="irfft", axis=axis), backend=backend)(x)
 
 
-def fft2(x: ArrayOrPlanes, *, backend: str | None = None) -> ArrayOrPlanes:
+def fft2(x: ArrayOrPlanes, *, backend: Optional[str] = None) -> ArrayOrPlanes:
     """2-D FFT over the last two axes (row pass then column pass)."""
-    xr, xi, was_c = _split(x)
-    yr, yi = _dispatch(xr, xi, False, backend)  # rows
-    yr, yi = jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
-    yr, yi = _dispatch(yr, yi, False, backend)  # columns
-    yr, yi = jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
-    return _join(yr, yi, was_c)
+    shape = _input_shape(x)
+    spec = FFTSpec(n=int(shape[-1]), kind="fft2", n2=int(shape[-2]))
+    return plan(spec, backend=backend)(x)
 
 
-def ifft2(x: ArrayOrPlanes, *, backend: str | None = None) -> ArrayOrPlanes:
-    xr, xi, was_c = _split(x)
-    yr, yi = _dispatch(xr, xi, True, backend)
-    yr, yi = jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
-    yr, yi = _dispatch(yr, yi, True, backend)
-    yr, yi = jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
-    return _join(yr, yi, was_c)
+def ifft2(x: ArrayOrPlanes, *, backend: Optional[str] = None) -> ArrayOrPlanes:
+    shape = _input_shape(x)
+    spec = FFTSpec(n=int(shape[-1]), kind="ifft2", n2=int(shape[-2]))
+    return plan(spec, backend=backend)(x)

@@ -105,6 +105,22 @@ class FFTPlan:
         """Paper Table-1 terminology: number of distinct kernel launches."""
         return self.hbm_round_trips
 
+    def level_for(self, m: int) -> tuple[int, int] | None:
+        """The (n_outer, n_inner) split for a length-``m`` sub-transform, or
+        None when ``m`` is a leaf.  Split products are strictly decreasing
+        (n, outer0, outer1, ...) so the lookup is unambiguous."""
+        for n_outer, n_inner in self.levels:
+            if n_outer * n_inner == m:
+                return n_outer, n_inner
+        return None
+
+    def leaf_pass(self, m: int) -> Pass:
+        """The leaf :class:`Pass` executing a length-``m`` sub-transform."""
+        for p in self.leaf_passes:
+            if p.n == m:
+                return p
+        raise KeyError(f"length {m} is not a leaf of the plan for n={self.n}")
+
 
 def _leaf_pass(n: int) -> Pass:
     if n <= DIRECT_MAX:

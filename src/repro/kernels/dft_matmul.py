@@ -23,7 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import compiler_params
 
 __all__ = ["dft_matmul_call"]
 
@@ -68,7 +69,7 @@ def dft_matmul_call(
         out_specs=[sig_spec, sig_spec],
         out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",)
         ),
     )

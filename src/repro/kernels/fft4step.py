@@ -36,7 +36,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import compiler_params
 
 __all__ = ["fft4step_call"]
 
@@ -120,7 +121,7 @@ def fft4step_call(
         out_specs=[sig, sig],
         out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",)
         ),
     )

@@ -1,23 +1,27 @@
 """Jit-ready wrappers around the Pallas FFT kernels.
 
-``ops.fft`` follows :mod:`repro.core.plan` exactly:
+``ops.execute_plan`` *consumes* an :class:`repro.core.plan.FFTPlan` — the
+split levels and leaf passes are read off the plan rather than re-derived by
+calling ``balanced_split`` at every recursion, so the schedule the planner
+(and the tests) reason about is exactly the schedule that executes:
 
-* N ≤ DIRECT_MAX           → one :func:`dft_matmul_call`
-* DIRECT_MAX < N ≤ FUSED_MAX → one :func:`fft4step_call` (one HBM round trip)
-* larger N                 → ops-level split levels (the paper's 2-call /
-  3-call regimes): reshape → column pass (kernel) → twiddle → row pass
-  (kernel) → natural-order transpose, recursing on factors.
+* leaf ``direct``   → one :func:`dft_matmul_call`
+* leaf ``fused4``   → one :func:`fft4step_call` (one HBM round trip)
+* each plan level   → ops-level split (the paper's 2-call / 3-call regimes):
+  reshape → column pass (kernel) → twiddle → row pass (kernel) →
+  natural-order transpose, recursing per the plan's level table.
 
 Responsibilities handled here so kernels stay minimal: batch flattening and
 tile padding, LUT construction (host-cached, inverse scaling folded into W2 /
 W), interpret-mode selection (auto on CPU), and plan-consistent recursion.
+``ops.fft``/``ops.ifft`` remain as plan-deriving conveniences.
 """
 
 from __future__ import annotations
 
 import functools
 import os
-from typing import Tuple
+from typing import Mapping, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +35,7 @@ from repro.kernels.fft4step import fft4step_call
 
 Planes = Tuple[jax.Array, jax.Array]
 
-__all__ = ["fft", "ifft", "should_interpret"]
+__all__ = ["execute_plan", "fft", "ifft", "should_interpret"]
 
 
 def should_interpret() -> bool:
@@ -70,24 +74,26 @@ def _pad_batch(xr, xi, bt):
     return xr, xi, b
 
 
-def _leaf_kernel(xr, xi, n, inverse, interpret) -> Planes:
-    """Single-pallas_call transform of the last axis (2-D input)."""
-    if n == 1:
+def _tile_for(p: plan_lib.Pass, batch_tiles: Mapping[int, int] | None) -> int:
+    if batch_tiles is not None and p.n in batch_tiles:
+        return batch_tiles[p.n]
+    return plan_lib.pick_batch_tile(p)
+
+
+def _leaf_kernel(xr, xi, p: plan_lib.Pass, inverse, interpret, batch_tiles) -> Planes:
+    """Single-pallas_call transform of the last axis (2-D input), executing
+    the plan's leaf :class:`~repro.core.plan.Pass` as scheduled."""
+    if p.n == 1:
         return xr, xi
-    if n <= plan_lib.DIRECT_MAX:
-        p = plan_lib.Pass(kind="direct", n=n)
-        bt = plan_lib.pick_batch_tile(p)
-        xr, xi, b = _pad_batch(xr, xi, bt)
-        wr, wi = _direct_luts(n, inverse)
+    bt = _tile_for(p, batch_tiles)
+    xr, xi, b = _pad_batch(xr, xi, bt)
+    if p.kind == "direct":
+        wr, wi = _direct_luts(p.n, inverse)
         yr, yi = dft_matmul_call(
             xr, xi, jnp.asarray(wr), jnp.asarray(wi), batch_tile=bt, interpret=interpret
         )
         return yr[:b], yi[:b]
-    n1, n2 = plan_lib.balanced_split(n)
-    p = plan_lib.Pass(kind="fused4", n=n, n1=n1, n2=n2)
-    bt = plan_lib.pick_batch_tile(p)
-    xr, xi, b = _pad_batch(xr, xi, bt)
-    w1r, w1i, tr, ti, w2r, w2i = _fused_luts(n1, n2, inverse)
+    w1r, w1i, tr, ti, w2r, w2i = _fused_luts(p.n1, p.n2, inverse)
     yr, yi = fft4step_call(
         xr,
         xi,
@@ -103,12 +109,15 @@ def _leaf_kernel(xr, xi, n, inverse, interpret) -> Planes:
     return yr[:b], yi[:b]
 
 
-def _transform(xr, xi, n, inverse, interpret) -> Planes:
-    """Transform last axis of 2-D (B, n) input, recursing per the plan."""
-    if n <= plan_lib.FUSED_MAX:
-        return _leaf_kernel(xr, xi, n, inverse, interpret)
+def _transform(xr, xi, n, fft_plan, inverse, interpret, batch_tiles) -> Planes:
+    """Transform last axis of 2-D (B, n) input, walking the plan's levels."""
+    level = fft_plan.level_for(n)
+    if level is None:
+        return _leaf_kernel(
+            xr, xi, fft_plan.leaf_pass(n), inverse, interpret, batch_tiles
+        )
     # Split level — one extra HBM round trip (paper's 2nd/3rd kernel call).
-    n1, n2 = plan_lib.balanced_split(n, cap=plan_lib.FUSED_MAX)
+    n1, n2 = level
     b = xr.shape[0]
     xr = xr.reshape(b, n1, n2)
     xi = xi.reshape(b, n1, n2)
@@ -116,7 +125,7 @@ def _transform(xr, xi, n, inverse, interpret) -> Planes:
     # kernel always sees (rows, n_leaf).
     xr = jnp.swapaxes(xr, -1, -2).reshape(b * n2, n1)
     xi = jnp.swapaxes(xi, -1, -2).reshape(b * n2, n1)
-    xr, xi = _transform(xr, xi, n1, inverse, interpret)
+    xr, xi = _transform(xr, xi, n1, fft_plan, inverse, interpret, batch_tiles)
     # Twiddle in (n2, n1) layout (traced: too large to embed).
     tr, ti = tw.traced_twiddle(n2, n1, inverse)
     xr = xr.reshape(b, n2, n1)
@@ -125,11 +134,41 @@ def _transform(xr, xi, n, inverse, interpret) -> Planes:
     # Row pass: transform over n2.
     xr = jnp.swapaxes(xr, -1, -2).reshape(b * n1, n2)
     xi = jnp.swapaxes(xi, -1, -2).reshape(b * n1, n2)
-    xr, xi = _transform(xr, xi, n2, inverse, interpret)
+    xr, xi = _transform(xr, xi, n2, fft_plan, inverse, interpret, batch_tiles)
     # Natural order: X[k1 + n1·k2] = C[k1, k2] → flatten Cᵀ.
     xr = jnp.swapaxes(xr.reshape(b, n1, n2), -1, -2).reshape(b, n1 * n2)
     xi = jnp.swapaxes(xi.reshape(b, n1, n2), -1, -2).reshape(b, n1 * n2)
     return xr, xi
+
+
+def execute_plan(
+    xr: jax.Array,
+    xi: jax.Array,
+    fft_plan: plan_lib.FFTPlan,
+    *,
+    inverse: bool = False,
+    interpret: bool | None = None,
+    batch_tiles: Mapping[int, int] | None = None,
+) -> Planes:
+    """Execute a pre-computed :class:`~repro.core.plan.FFTPlan` with the
+    Pallas kernels over the last axis (any leading batch dims).
+
+    ``batch_tiles`` (leaf length → tile) lets a :class:`PlannedFFT` carry the
+    negotiated tile sizes; unlisted leaves fall back to the VMEM-budget pick.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n = xr.shape[-1]
+    if n != fft_plan.n:
+        raise ValueError(f"plan is for n={fft_plan.n}, input has n={n}")
+    lead = xr.shape[:-1]
+    b = int(np.prod(lead)) if lead else 1
+    yr, yi = _transform(
+        xr.reshape(b, n), xi.reshape(b, n), n, fft_plan, inverse, interpret, batch_tiles
+    )
+    # Inverse scaling is folded into the leaf LUTs (1/n_leaf each); the split
+    # levels multiply the partial scalings so the total is exactly 1/n.
+    return yr.reshape(*lead, n), yi.reshape(*lead, n)
 
 
 def fft(
@@ -139,18 +178,13 @@ def fft(
     inverse: bool = False,
     interpret: bool | None = None,
 ) -> Planes:
-    """Pallas-backed FFT over the last axis (any leading batch dims)."""
-    if interpret is None:
-        interpret = should_interpret()
+    """Plan-deriving convenience: plans ``n`` and calls :func:`execute_plan`."""
     n = xr.shape[-1]
     if n & (n - 1):
         raise ValueError(f"length must be a power of two, got {n}")
-    lead = xr.shape[:-1]
-    b = int(np.prod(lead)) if lead else 1
-    yr, yi = _transform(xr.reshape(b, n), xi.reshape(b, n), n, inverse, interpret)
-    # Inverse scaling is folded into the leaf LUTs (1/n_leaf each); the split
-    # levels multiply the partial scalings so the total is exactly 1/n.
-    return yr.reshape(*lead, n), yi.reshape(*lead, n)
+    return execute_plan(
+        xr, xi, plan_lib.plan_fft(n), inverse=inverse, interpret=interpret
+    )
 
 
 def ifft(xr, xi, *, interpret: bool | None = None) -> Planes:

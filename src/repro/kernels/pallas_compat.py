@@ -1,0 +1,26 @@
+"""Version-tolerant shims over the Pallas TPU API surface.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``).  Kernels go through
+:func:`compiler_params` so either spelling works without pinning JAX.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["compiler_params"]
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if _COMPILER_PARAMS_CLS is None:  # pragma: no cover - very old/new pallas
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported JAX version"
+    )
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object under either JAX naming."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -163,10 +163,29 @@ def _lower_decode(cfg, shape, mesh, par):
 # ---------------------------------------------------------------------------
 
 
+def _fft_plan_info(fft_shape, model_n: int) -> dict:
+    """Plan metadata recorded alongside the lowering: the per-leaf schedule
+    facts (one plan per pencil factor) the pencil driver will execute."""
+    from repro.core import distributed as dist
+    from repro.core import plan as plan_lib
+
+    if fft_shape.kind == "fft2d":
+        leaf_ns = [fft_shape.n, fft_shape.n2]
+    else:
+        leaf_ns = list(dist.pencil_factors(fft_shape.n, model_n))
+    # Schedule facts only — backend negotiation on the dry-run host (CPU)
+    # would misstate what the production TPU pencil driver picks.
+    return {
+        "leaf_lengths": leaf_ns,
+        "leaf_schedules": [plan_lib.describe(m) for m in leaf_ns],
+        "hbm_round_trips": max(
+            plan_lib.plan_fft(m).hbm_round_trips for m in leaf_ns
+        ),
+    }
+
+
 def _lower_fft(fft_shape, mesh, par):
     from repro.core import distributed as dist
-
-    from jax import shard_map
 
     batch_axes = ("pod", "data") if par.pod_axis else ("data",)
     model_n = mesh.shape["model"]
@@ -181,12 +200,8 @@ def _lower_fft(fft_shape, mesh, par):
                 xr, xi, n=n, axis_name="model", num_shards=model_n
             )
 
-        fn = shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(spec, spec),
-            out_specs=(spec, spec),
-            check_vma=False,
+        fn = dist.shard_map_compat(
+            body, mesh, in_specs=(spec, spec), out_specs=(spec, spec)
         )
         jfn = jax.jit(fn, in_shardings=(NamedSharding(mesh, spec),) * 2)
         return jfn.lower(x_sds, x_sds)
@@ -201,9 +216,8 @@ def _lower_fft(fft_shape, mesh, par):
                 xr, xi, n1=n1, n2=n2, axis_name="model", num_shards=model_n
             )
 
-        fn = shard_map(
-            body2, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
-            check_vma=False,
+        fn = dist.shard_map_compat(
+            body2, mesh, in_specs=(spec, spec), out_specs=(spec, spec)
         )
         jfn = jax.jit(fn, in_shardings=(NamedSharding(mesh, spec),) * 2)
         return jfn.lower(x_sds, x_sds)
@@ -229,9 +243,9 @@ def _lower_fft(fft_shape, mesh, par):
                 from_pencil=True,
             )
 
-        fn = shard_map(
-            bodyc, mesh=mesh, in_specs=(spec, spec, hspec, hspec),
-            out_specs=(spec, spec), check_vma=False,
+        fn = dist.shard_map_compat(
+            bodyc, mesh, in_specs=(spec, spec, hspec, hspec),
+            out_specs=(spec, spec),
         )
         jfn = jax.jit(
             fn,
@@ -290,6 +304,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False) -
             mesh = make_production_mesh(multi_pod=multi_pod)
             par = parallel_config_for(mesh)
             lowered = _lower_fft(fft_shape, mesh, par)
+            record["fft_plan"] = _fft_plan_info(fft_shape, mesh.shape["model"])
             tokens = 0
             n_active = 0
             dtype = "f32"
@@ -313,6 +328,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False) -
 
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older JAX: one dict per device
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         # Loop-aware costs from our own HLO walk (XLA's cost_analysis counts
         # while bodies once — verified; see analysis/hlo.py).

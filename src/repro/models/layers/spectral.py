@@ -58,10 +58,10 @@ def spectral_forward(params, x, *, cfg, return_cache: bool = False):
     cd = x.dtype
     u = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(cd))
     g = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["w_gate"].astype(cd)))
-    # channels-major for the length-axis FFT: (B, D, S)
-    uc = jnp.swapaxes(u, 1, 2).astype(jnp.float32)
-    y = fft_conv(uc, params["filt"])  # (B, D, S) causal
-    y = jnp.swapaxes(y, 1, 2).astype(cd) * g
+    # axis-aware planned conv over the sequence axis; per-channel filters
+    # broadcast once the conv axis is moved last inside fft_conv.
+    y = fft_conv(u.astype(jnp.float32), params["filt"], axis=1)  # (B, S, D)
+    y = y.astype(cd) * g
     out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(cd))
     out = ann(out, "batch", "seq", "embed")
     if return_cache:

@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim: property tests skip cleanly when the dev extra
+is not installed, while the deterministic tests in the same files still run.
+
+Usage (instead of importing hypothesis directly):
+
+    from _hyp import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Stand-in for hypothesis.strategies: placeholders only — the test
+        body never runs because ``given`` skips it."""
+
+        @staticmethod
+        def sampled_from(values):
+            return None
+
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            return None
+
+    st = _Strategies()
+
+    def settings(**kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed (dev extra)")(
+                fn
+            )
+
+        return deco

@@ -48,13 +48,12 @@ assert rel < 5e-5, ('pfft inverse', rel)
 
 # ---- 2-D (SAR layout): rows sharded --------------------------------------
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
 n1, n2 = 128, 256
 img = (np.random.randn(2, n1, n2) + 1j*np.random.randn(2, n1, n2)).astype(np.complex64)
 spec = P(None, 'x', None)
-fn = shard_map(
+fn = D.shard_map_compat(
     lambda xr, xi: D.pfft2d(xr, xi, n1=n1, n2=n2, axis_name='x', num_shards=8),
-    mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec), check_vma=False)
+    mesh, in_specs=(spec, spec), out_specs=(spec, spec))
 yr, yi = fn(jnp.asarray(img.real), jnp.asarray(img.imag))
 ref2 = np.fft.fft2(img)
 rel = np.abs((np.asarray(yr)+1j*np.asarray(yi)) - ref2).max() / np.abs(ref2).max()

@@ -1,8 +1,8 @@
-"""FFT convolution vs direct convolution (incl. hypothesis sweep)."""
+"""FFT convolution vs direct convolution (hypothesis sweep optional)."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.conv import fft_conv, next_pow2
 

@@ -1,10 +1,10 @@
-"""Core FFT correctness + property-based invariants (hypothesis)."""
+"""Core FFT correctness + property-based invariants (hypothesis optional)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import fft as F
 
