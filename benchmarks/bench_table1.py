@@ -9,20 +9,33 @@ Stand-ins on this CPU container:
           interpret-mode timing is meaningless, see EXPERIMENTS.md).
 
 The paper's Table 1 sizes 16..65536, single transforms, plus the batched
-mid-size regime the paper's SAR motivation cares about.
+mid-size regime the paper's SAR motivation cares about, plus the split
+regime (2¹⁷..2²⁰) where the linearized pass program rules: each row reports
+the plan's HBM round-trip count and modeled HBM GB alongside wall-clock, so
+the schedule is visible next to the time it buys.  Every run appends a
+trajectory entry to ``BENCH_fft.json`` so later PRs can track the
+split-regime speedup against this baseline.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import roofline as rl
 from repro.core import fft as F
 
 SIZES = [16, 64, 256, 1024, 4096, 16384, 65536]
+#: Split-regime sizes — the linearized pass-program path this repo optimizes.
+SPLIT_SIZES = [2**17, 2**18, 2**20]
+SMOKE_SIZES = [256, 4096, 2**17]
+
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "BENCH_fft.json")
 
 
 def _time(fn, *args, reps=5, warmup=2) -> float:
@@ -49,9 +62,9 @@ def _time_np(fn, *args, reps=5, warmup=1) -> float:
     return min(ts)
 
 
-def run(batch: int = 1):
+def run(batch: int = 1, sizes=None, reps: int = 5):
     rows = []
-    for n in SIZES:
+    for n in sizes if sizes is not None else SIZES:
         x = (np.random.randn(batch, n) + 1j * np.random.randn(batch, n)).astype(
             np.complex64
         )
@@ -60,22 +73,64 @@ def run(batch: int = 1):
         planned = F.plan(F.FFTSpec(n=n, kind="fft", batch_hint=batch), backend="xla")
         ours = jax.jit(lambda v: planned(v))
         cufft_standin = jax.jit(jnp.fft.fft)
-        t_ours = _time(ours, xj)
-        t_jnp = _time(cufft_standin, xj)
-        t_np = _time_np(np.fft.fft, x)
-        rows.append((n, batch, t_np, t_jnp, t_ours))
+        t_ours = _time(ours, xj, reps=reps)
+        t_jnp = _time(cufft_standin, xj, reps=reps)
+        t_np = _time_np(np.fft.fft, x, reps=reps)
+        report = rl.fft_pass_report(n, batch=batch)
+        rows.append(
+            {
+                "n": n,
+                "batch": batch,
+                "fftw_us": t_np * 1e6,
+                "cufft_us": t_jnp * 1e6,
+                "ours_us": t_ours * 1e6,
+                "passes": report["hbm_round_trips"],
+                "modeled_hbm_gb": report["modeled_hbm_bytes"] / 1e9,
+            }
+        )
     return rows
 
 
-def main(emit=print):
+def _append_trajectory(all_rows) -> None:
+    """BENCH_fft.json: one entry per run, so later PRs can diff the
+    split-regime numbers against this PR's baseline on the same host."""
+    entry = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "rows": all_rows,
+    }
+    path = os.path.abspath(TRAJECTORY)
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+
+
+def main(emit=print, smoke: bool = False):
     emit("table1.name,n,batch,fftw_standin_us,cufft_standin_us,ours_us,"
-         "speedup_vs_fftw,speedup_vs_cufft")
-    for batch in (1, 64):
-        for n, b, t_np, t_jnp, t_ours in run(batch):
+         "speedup_vs_fftw,speedup_vs_cufft,plan_passes,modeled_hbm_gb")
+    all_rows = []
+    batches = (1,) if smoke else (1, 64)
+    reps = 2 if smoke else 5
+    for batch in batches:
+        sizes = SMOKE_SIZES if smoke else SIZES + (SPLIT_SIZES if batch == 1 else [])
+        for r in run(batch, sizes=sizes, reps=reps):
             emit(
-                f"table1,{n},{b},{t_np*1e6:.1f},{t_jnp*1e6:.1f},{t_ours*1e6:.1f},"
-                f"{t_np/t_ours:.2f},{t_jnp/t_ours:.2f}"
+                f"table1,{r['n']},{r['batch']},{r['fftw_us']:.1f},"
+                f"{r['cufft_us']:.1f},{r['ours_us']:.1f},"
+                f"{r['fftw_us']/r['ours_us']:.2f},"
+                f"{r['cufft_us']/r['ours_us']:.2f},"
+                f"{r['passes']},{r['modeled_hbm_gb']:.4f}"
             )
+            all_rows.append(r)
+    if not smoke:
+        _append_trajectory(all_rows)
 
 
 if __name__ == "__main__":

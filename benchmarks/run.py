@@ -2,7 +2,10 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run table1 sar # subset
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: fast sanity pass
 
+``--smoke`` runs a tiny-size, low-rep subset so CI catches import breakage
+and API drift in every bench module without paying full benchmark time.
 Emits ``name,...`` CSV rows (paper-table stand-ins documented per module).
 """
 
@@ -17,10 +20,23 @@ SUITES = {
     "roofline": bench_roofline.main, # dry-run roofline summary
 }
 
+#: Suites with a fast-path smoke mode; the rest are import-checked only.
+SMOKE_SUITES = {"table1": lambda: bench_table1.main(smoke=True)}
+
 
 def main() -> None:
-    picks = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    picks = [a for a in args if a in SUITES] or list(SUITES)
     for name in picks:
+        if smoke:
+            runner = SMOKE_SUITES.get(name)
+            if runner is None:
+                print(f"# ---- {name}: import ok, no smoke mode ----", flush=True)
+                continue
+            print(f"# ---- {name} (smoke) ----", flush=True)
+            runner()
+            continue
         print(f"# ---- {name} ----", flush=True)
         SUITES[name]()
 

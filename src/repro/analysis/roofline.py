@@ -30,6 +30,7 @@ __all__ = [
     "roofline_terms",
     "model_flops",
     "summarize_cell",
+    "fft_pass_report",
 ]
 
 
@@ -139,6 +140,43 @@ def collective_bytes(hlo_text: str) -> dict:
 def model_flops(n_params_active: int, tokens: int) -> float:
     """6·N·D — the useful-FLOPs yardstick (N = active params)."""
     return 6.0 * n_params_active * tokens
+
+
+def fft_pass_report(n: int, batch: int = 1, hw: HW = V5E) -> dict:
+    """Modeled HBM traffic of a length-``n`` FFT's linearized pass program.
+
+    One entry per pass (the plan's HBM round trips, literally), plus the
+    total and its roofline memory term — so the paper's kernel-call count is
+    not just asserted by tests but observable in every dry-run artifact and
+    benchmark row.
+    """
+    from repro.core import plan as plan_lib  # local: analysis stays lazy
+
+    plan = plan_lib.plan_fft(n)
+    passes = []
+    for i, p in enumerate(plan.passes):
+        nbytes = plan_lib.pass_hbm_bytes(p, batch)
+        pencils, stride, f = p.view_in if p.view_in else (1, 1, p.n)
+        passes.append(
+            {
+                "pass": i,
+                "kind": p.kind,
+                "n": p.n,
+                "view": [pencils, stride, f],
+                "twiddle": list(p.twiddle_after) if p.twiddle_after else None,
+                "order": p.order,
+                "hbm_bytes": nbytes,
+            }
+        )
+    total = plan_lib.program_hbm_bytes(plan.passes, batch)
+    return {
+        "n": n,
+        "batch": batch,
+        "hbm_round_trips": plan.hbm_round_trips,
+        "passes": passes,
+        "modeled_hbm_bytes": total,
+        "memory_s": total / hw.hbm_bw,
+    }
 
 
 def roofline_terms(

@@ -49,15 +49,21 @@ __all__ = [
 ]
 
 
-def _leaf_plan(n: int, inverse: bool, backend: str | None) -> "fft_lib.PlannedFFT":
+def _leaf_plan(
+    n: int, inverse: bool, backend: str | None, axis: int = -1
+) -> "fft_lib.PlannedFFT":
     """Per-leaf :class:`PlannedFFT` for the local pencil transforms.
 
     Each pencil factor gets its own plan (cached by spec), so the local
     length-n1 and length-n2 passes reuse frozen schedules and LUTs instead of
-    re-dispatching on a backend string per call.
+    re-dispatching on a backend string per call.  ``axis=-2`` plans are the
+    column passes of the pass program: axis-capable backends (pallas, xla)
+    execute them in place over the strided view — the hand-rolled
+    swapaxes sandwiches this driver used to carry are gone.
     """
     return fft_lib.plan(
-        fft_lib.FFTSpec(n=n, kind="ifft" if inverse else "fft"), backend=backend
+        fft_lib.FFTSpec(n=n, kind="ifft" if inverse else "fft", axis=axis),
+        backend=backend,
     )
 
 
@@ -114,8 +120,10 @@ def pfft(
     lead = xr.shape[:-1]
     la = len(lead)  # number of leading batch axes
 
-    # Per-leaf plans: the n1 and n2 local passes each reuse a frozen schedule.
-    plan_n1 = _leaf_plan(n1, inverse, backend)
+    # Per-leaf plans: the n1 and n2 local passes each reuse a frozen
+    # schedule.  n1 is a column pass (axis -2) straight out of the program —
+    # executed in place over the strided view, no swapaxes glue.
+    plan_n1 = _leaf_plan(n1, inverse, backend, axis=-2)
     plan_n2 = _leaf_plan(n2, inverse, backend)
 
     # Local shard is rows [d·p, (d+1)·p) of the (n1, n2) matrix.
@@ -124,15 +132,13 @@ def pfft(
     # (1) a2a transpose → full columns n2 ∈ [d·q, (d+1)·q): (n1, q)
     xr = _a2a(xr, axis_name, la + 1, la)
     xi = _a2a(xi, axis_name, la + 1, la)
-    # (2) FFT over n1 (axis -2): swap to put it last.
-    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (q, n1)
+    # (2) FFT over n1 (axis -2): in-place column pass.
     xr, xi = plan_n1.apply_planes(xr, xi)
-    # (3) twiddle in (q, n1)^T layout.
+    # (3) twiddle in (n1, q) layout.
     twr, twi = _local_twiddle(n1, n2, q, axis_name, inverse)  # (n1, q)
-    xr, xi = cmul(xr, xi, twr.T, twi.T)
-    # (4) a2a transpose back → full rows k1 ∈ [d·p, (d+1)·p): (q, n1) → (n2, p)
-    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (n1, q)
-    xr = _a2a(xr, axis_name, la, la + 1)  # (n1, q) -> ... wait see below
+    xr, xi = cmul(xr, xi, twr, twi)
+    # (4) a2a transpose back → full rows k1 ∈ [d·p, (d+1)·p): (n1, q) → (p, n2)
+    xr = _a2a(xr, axis_name, la, la + 1)
     xi = _a2a(xi, axis_name, la, la + 1)
     # after split on rows (n1 → d·p) and concat on cols: (p, n2) with full rows.
     # (5) FFT over n2 (last axis, local).  (For inverse=True the two leaf
@@ -171,7 +177,7 @@ def pifft(
     lead = xr.shape[:-1]
     la = len(lead)
 
-    plan_n1 = _leaf_plan(n1, inverse=True, backend=backend)
+    plan_n1 = _leaf_plan(n1, inverse=True, backend=backend, axis=-2)
     plan_n2 = _leaf_plan(n2, inverse=True, backend=backend)
 
     if not from_pencil:
@@ -192,13 +198,11 @@ def pifft(
     # a2a to column slabs: (p, n2) → (n1, q)
     xr = _a2a(xr, axis_name, la + 1, la)
     xi = _a2a(xi, axis_name, la + 1, la)
-    # conjugate twiddle, then inverse FFT over n1.
+    # conjugate twiddle, then inverse FFT over n1 (in-place column pass).
     twr, twi = _local_twiddle(n1, n2, q, axis_name, inverse=True)  # (n1, q)
     xr, xi = cmul(xr, xi, twr, twi)
-    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (q, n1)
-    xr, xi = plan_n1.apply_planes(xr, xi)
-    # back to block layout over the original axis: (q, n1) → (p, n2) rows.
-    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (n1, q)
+    xr, xi = plan_n1.apply_planes(xr, xi)  # (n1, q), axis -2
+    # back to block layout over the original axis: (n1, q) → (p, n2) rows.
     xr = _a2a(xr, axis_name, la, la + 1)  # (p, n2)
     xi = _a2a(xi, axis_name, la, la + 1)
     return xr.reshape(*lead, p * n2), xi.reshape(*lead, p * n2)
@@ -229,17 +233,15 @@ def pfft2d(
     la = len(lead)
 
     plan_rows = _leaf_plan(n2, inverse, backend)
-    plan_cols = _leaf_plan(n1, inverse, backend)
+    plan_cols = _leaf_plan(n1, inverse, backend, axis=-2)
 
     # (1) row FFTs over n2 — local and contiguous.
     xr, xi = plan_rows.apply_planes(xr, xi)
     # (2) a2a transpose: (p, n2) → (n1, q) column slabs.
     xr = _a2a(xr, axis_name, la + 1, la)
     xi = _a2a(xi, axis_name, la + 1, la)
-    # (3) column FFTs over n1: swap to last axis, transform, swap back.
-    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (q, n1)
+    # (3) column FFTs over n1 — in-place column pass (axis -2).
     xr, xi = plan_cols.apply_planes(xr, xi)
-    xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)  # (n1, q)
     # (4) a2a back to row slabs (p, n2).
     xr = _a2a(xr, axis_name, la, la + 1)
     xi = _a2a(xi, axis_name, la, la + 1)

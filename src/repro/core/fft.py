@@ -43,6 +43,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import inspect
 import os
 import threading
 import types
@@ -172,14 +173,27 @@ class BackendCapabilities:
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
-    """A registered executor: transforms the last axis of split planes."""
+    """A registered executor: transforms the last axis of split planes.
+
+    ``takes_axis`` backends additionally accept ``axis=-2`` and transform the
+    second-to-last axis in place (the pencil column pass) — detected from the
+    function signature at registration.
+    """
 
     name: str
     fn: Callable  # (xr, xi, *, inverse: bool, planned: PlannedFFT) -> Planes
     capabilities: BackendCapabilities
+    takes_axis: bool = False
 
 
 _REGISTRY: dict = {}
+
+
+def _accepts_axis(fn: Callable) -> bool:
+    try:
+        return "axis" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / exotic callables
+        return False
 
 
 def register_backend(
@@ -193,12 +207,16 @@ def register_backend(
 
     ``fn(xr, xi, *, inverse, planned)`` must transform the last axis of the
     split float32 planes, following ``planned.fft_plan``'s schedule (or its
-    own, for reference backends).  Registering an existing name requires
-    ``overwrite=True`` so a typo cannot silently shadow a built-in.
+    own, for reference backends).  If it also takes an ``axis`` keyword it
+    will be handed ``axis=-2`` column transforms directly (no transpose glue).
+    Registering an existing name requires ``overwrite=True`` so a typo cannot
+    silently shadow a built-in.
     """
     if not overwrite and name in _REGISTRY:
         raise ValueError(f"FFT backend {name!r} is already registered")
-    entry = Backend(name, fn, capabilities or BackendCapabilities())
+    entry = Backend(
+        name, fn, capabilities or BackendCapabilities(), takes_axis=_accepts_axis(fn)
+    )
     _REGISTRY[name] = entry
     # Existing cached plans may have negotiated without this entry (or hold a
     # stale fn under overwrite=True) — re-resolve on next plan().
@@ -333,21 +351,26 @@ def _input_shape(x: ArrayOrPlanes) -> tuple:
 def _materialize_luts(
     fft_plan: plan_lib.FFTPlan, inverse: bool, backend_name: str
 ) -> tuple:
-    """Host-side LUTs for every leaf pass — the paper's texture-memory tables
-    built at plan time so first execution pays no table construction.
+    """Host-side LUTs for every program pass — the paper's texture-memory
+    tables built at plan time so first execution pays no table construction.
 
-    Warms the exact builder the backend will hit (ops' scaled LUT caches for
-    pallas, the twiddle factory otherwise); the returned references keep the
-    arrays alive for the lifetime of the plan."""
+    Warms the exact builder the backend will hit (ops' scaled transform-LUT
+    and inter-factor twiddle caches for pallas, the twiddle factory
+    otherwise); the returned references keep the arrays alive for the
+    lifetime of the plan."""
     luts = []
     if backend_name == "pallas":
         from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
 
-        for p in fft_plan.leaf_passes:
+        for p in fft_plan.passes:
+            if p.kind == "reorder":
+                continue
             if p.kind == "direct":
                 luts.append(kernel_ops._direct_luts(p.n, inverse))
             else:
                 luts.append(kernel_ops._fused_luts(p.n1, p.n2, inverse))
+            if p.twiddle_after is not None:
+                luts.append(kernel_ops._pass_twiddle_luts(*p.twiddle_after, inverse))
         return tuple(luts)
     for p in fft_plan.leaf_passes:
         if p.kind == "direct":
@@ -387,7 +410,10 @@ class PlannedFFT:
 
     Non-complex kinds (rfft/irfft/fft2/ifft2) hold child PlannedFFT handles
     for their inner complex transforms, so backends only ever execute plain
-    fft/ifft schedules.
+    fft/ifft schedules; rfft/irfft additionally carry an ``epilogue``
+    :class:`~repro.core.plan.Pass` — the Hermitian recombination executed as
+    one more program pass (a single Pallas kernel on the pallas backend)
+    rather than traced XLA glue.
     """
 
     def __init__(
@@ -399,12 +425,14 @@ class PlannedFFT:
         children: tuple = (),
         luts: tuple = (),
         batch_tiles: tuple = (),
+        epilogue: Optional[plan_lib.Pass] = None,
     ):
         self.spec = spec
         self.backend = backend
         self.fft_plan = fft_plan
         self.children = children
         self.luts = luts
+        self.epilogue = epilogue
         self._batch_tiles = dict(batch_tiles)
 
     # -- identity ----------------------------------------------------------
@@ -433,20 +461,46 @@ class PlannedFFT:
     @property
     def hbm_round_trips(self) -> int:
         plans = [self.fft_plan] if self.fft_plan else [c.fft_plan for c in self.children]
-        return max(p.hbm_round_trips for p in plans)
+        trips = max(p.hbm_round_trips for p in plans)
+        return trips + (1 if self.epilogue is not None else 0)
+
+    @property
+    def passes(self) -> tuple:
+        """The linearized pass program this handle executes (child passes for
+        composite kinds, plus the recombination epilogue for rfft/irfft)."""
+        if self.fft_plan is not None:
+            return self.fft_plan.passes
+        ps = tuple(p for c in self.children for p in c.fft_plan.passes)
+        if self.epilogue is not None:
+            ps = ps + (self.epilogue,)
+        return ps
 
     def describe(self) -> str:
         n_main = self.fft_plan.n if self.fft_plan else self.children[0].fft_plan.n
-        return (
+        s = (
             f"{self.spec.kind} N={self.spec.n} backend={self.backend.name}: "
             + plan_lib.describe(n_main)
         )
+        if self.epilogue is not None:
+            s += f"; epilogue pass: {self.epilogue.kind} n={self.epilogue.n}"
+        return s
 
     # -- execution ---------------------------------------------------------
 
-    def _complex(self, xr, xi, inverse: bool) -> Planes:
-        """Backend-executed complex transform over the last axis."""
-        return self.backend.fn(xr, xi, inverse=inverse, planned=self)
+    def _complex(self, xr, xi, inverse: bool, axis: int = -1) -> Planes:
+        """Backend-executed complex transform over ``axis`` (-1 or -2).
+
+        ``axis=-2`` goes to the backend natively when it declared axis
+        support (the pencil column pass); otherwise through a transpose
+        sandwich so externally registered last-axis backends keep working.
+        """
+        if axis == -1 or self.backend.takes_axis:
+            return self.backend.fn(xr, xi, inverse=inverse, planned=self, axis=axis) \
+                if self.backend.takes_axis \
+                else self.backend.fn(xr, xi, inverse=inverse, planned=self)
+        xr, xi = jnp.swapaxes(xr, axis, -1), jnp.swapaxes(xi, axis, -1)
+        yr, yi = self.backend.fn(xr, xi, inverse=inverse, planned=self)
+        return jnp.swapaxes(yr, axis, -1), jnp.swapaxes(yi, axis, -1)
 
     def _to_last(self, a):
         return jnp.moveaxis(a, self.spec.axis, -1)
@@ -459,9 +513,16 @@ class PlannedFFT:
 
         This is the raw entry point used by the distributed pencil driver and
         the conv layer; :meth:`__call__` adds complex-array packing on top.
+        An ``axis=-2`` complex plan executes as an in-place column pass on
+        axis-capable backends — no materialized transpose.
         """
         kind = self.spec.kind
-        move = self.spec.axis != -1
+        ax = self.spec.axis
+        if ax < 0:
+            ax += xr.ndim
+        if kind in _COMPLEX_KINDS and ax == xr.ndim - 2 and xr.ndim >= 2:
+            return self._complex(xr, xi, inverse=kind == "ifft", axis=-2)
+        move = ax != xr.ndim - 1
         if move:
             xr, xi = self._to_last(xr), self._to_last(xi)
         if kind in _COMPLEX_KINDS:
@@ -491,6 +552,11 @@ class PlannedFFT:
         xr, xi = cols._complex(xr, xi, inverse=self.spec.kind == "ifft2")
         return jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)
 
+    def _recomb_kernel(self) -> bool:
+        """Whether the Hermitian recombination runs as a Pallas epilogue pass
+        (pallas backend) instead of traced XLA glue."""
+        return self.backend.name == "pallas" and self.epilogue is not None
+
     def _rfft(self, x: jax.Array) -> Planes:
         """Real FFT via even/odd complex packing — N/2-point complex transform.
 
@@ -498,6 +564,10 @@ class PlannedFFT:
         for the real signals of the SAR / long-conv workloads this halves both
         the arithmetic and — more importantly here — the HBM traffic of the
         forward transform.  Returns (real, imag) planes of n//2 + 1 bins.
+
+        The Hermitian recombination is the plan's ``epilogue`` pass: one
+        Pallas kernel round trip on the pallas backend (see
+        ``kernels.pencil.rfft_recomb_call``), traced jnp on the others.
         """
         n = self.spec.n
         x = jnp.asarray(x, jnp.float32)
@@ -510,28 +580,33 @@ class PlannedFFT:
         zr = x[..., 0::2]  # even samples  -> real plane
         zi = x[..., 1::2]  # odd samples   -> imag plane
         Zr, Zi = inner._complex(zr, zi, inverse=False)
+        wr_np, wi_np = self.luts[0]
         m = n // 2
-        # Z[-k] with wraparound: index (m - k) mod m.
-        idx = (m - jnp.arange(m)) % m
-        Zr_f, Zi_f = Zr[..., idx], Zi[..., idx]
-        # E[k] = (Z[k] + conj(Z[-k]))/2 ; O[k] = (Z[k] - conj(Z[-k]))/(2i)
-        Er, Ei = (Zr + Zr_f) * 0.5, (Zi - Zi_f) * 0.5
-        Or_, Oi = (Zi + Zi_f) * 0.5, (Zr_f - Zr) * 0.5
-        wr_np, wi_np = tw.rfft_recomb_twiddle(n)
-        wr, wi = jnp.asarray(wr_np)[:m], jnp.asarray(wi_np)[:m]
-        Tr, Ti = fft_xla.cmul(Or_, Oi, wr, wi)
-        Xr, Xi = Er + Tr, Ei + Ti
-        # k = m (Nyquist): X[m] = E[0] - O[0] (real for real input).
-        nyq_r = Er[..., 0:1] - Or_[..., 0:1]
-        nyq_i = Ei[..., 0:1] - Oi[..., 0:1]
-        Xr = jnp.concatenate([Xr, nyq_r], axis=-1)
-        Xi = jnp.concatenate([Xi, nyq_i], axis=-1)
+        if self._recomb_kernel():
+            from repro.kernels import ops as kernel_ops
+            from repro.kernels import pencil as pencil_kernels
+
+            lead = Zr.shape[:-1]
+            b = int(np.prod(lead)) if lead else 1
+            Xr, Xi = pencil_kernels.rfft_recomb_call(
+                Zr.reshape(b, m), Zi.reshape(b, m), wr_np, wi_np,
+                interpret=kernel_ops.should_interpret(),
+            )
+            Xr = Xr.reshape(*lead, m + 1)
+            Xi = Xi.reshape(*lead, m + 1)
+        else:
+            wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
+            Xr, Xi = fft_xla.rfft_recomb(Zr, Zi, wr, wi)
         if move:
             Xr, Xi = self._from_last(Xr), self._from_last(Xi)
         return Xr, Xi
 
     def _irfft(self, x: Planes) -> jax.Array:
-        """Inverse of the rfft packing; output is the length-``n`` real signal."""
+        """Inverse of the rfft packing; output is the length-``n`` real signal.
+
+        The recombination prologue mirrors :meth:`_rfft`: a single Pallas
+        pass on the pallas backend, traced jnp elsewhere.
+        """
         n = self.spec.n
         Xr, Xi = x
         move = self.spec.axis != -1
@@ -541,18 +616,22 @@ class PlannedFFT:
         if Xr.shape[-1] != m + 1:
             raise ValueError(f"irfft expects n//2+1={m + 1} bins, got {Xr.shape[-1]}")
         (inner,) = self.children
-        # Reconstruct E and O from X[k], X*[m-k]:
-        idx = m - jnp.arange(m)
-        Xr_k, Xi_k = Xr[..., :m], Xi[..., :m]
-        Xr_f, Xi_f = Xr[..., idx], Xi[..., idx]
-        Er, Ei = (Xr_k + Xr_f) * 0.5, (Xi_k - Xi_f) * 0.5
-        Dr, Di = (Xr_k - Xr_f) * 0.5, (Xi_k + Xi_f) * 0.5
-        wr_np, wi_np = tw.rfft_recomb_twiddle(n, inverse=True)  # e^{+2πik/n}
-        wr, wi = jnp.asarray(wr_np)[:m], jnp.asarray(wi_np)[:m]
-        Or_, Oi = fft_xla.cmul(Dr, Di, wr, wi)
-        # Z = E + i·O
-        Zr = Er - Oi
-        Zi = Ei + Or_
+        wr_np, wi_np = self.luts[0]  # e^{+2πik/n}
+        if self._recomb_kernel():
+            from repro.kernels import ops as kernel_ops
+            from repro.kernels import pencil as pencil_kernels
+
+            lead = Xr.shape[:-1]
+            b = int(np.prod(lead)) if lead else 1
+            Zr, Zi = pencil_kernels.irfft_recomb_call(
+                Xr.reshape(b, m + 1), Xi.reshape(b, m + 1), wr_np, wi_np,
+                interpret=kernel_ops.should_interpret(),
+            )
+            Zr = Zr.reshape(*lead, m)
+            Zi = Zi.reshape(*lead, m)
+        else:
+            wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
+            Zr, Zi = fft_xla.irfft_recomb(Xr, Xi, wr, wi)
         zr, zi = inner._complex(Zr, Zi, inverse=True)
         out = jnp.stack([zr, zi], axis=-1).reshape(*zr.shape[:-1], n)
         if move:
@@ -617,7 +696,18 @@ def _plan_cached(spec: FFTSpec, backend_name: Optional[str], platform: str) -> P
         # The packed complex transform sees the caller's batch unchanged.
         inner = child(spec.n // 2, kind == "irfft", spec.batch_hint)
         luts = (tw.rfft_recomb_twiddle(spec.n, inverse=kind == "irfft"),)
-        return PlannedFFT(spec, entry, None, children=(inner,), luts=luts)
+        m = spec.n // 2
+        bins = (1, 1, m + 1)
+        epilogue = plan_lib.Pass(
+            kind=f"{kind}_recomb",
+            n=spec.n,
+            view_in=(1, 1, m) if kind == "rfft" else bins,
+            view_out=bins if kind == "rfft" else (1, 1, m),
+            order="natural",
+        )
+        return PlannedFFT(
+            spec, entry, None, children=(inner,), luts=luts, epilogue=epilogue
+        )
 
     # fft2 / ifft2: row pass over the last axis (n), column pass over n2.
     # No batch_hint for the children: each pass's kernel batch is the
@@ -634,19 +724,49 @@ def _plan_cached(spec: FFTSpec, backend_name: Optional[str], platform: str) -> P
 # ---------------------------------------------------------------------------
 
 
-def _stockham_backend(xr, xi, *, inverse, planned):
-    return fft_xla.stockham_fft(xr, xi, inverse=inverse)
+def _swap_to_last(fn):
+    """Run a last-axis transform over axis -2 via a transpose sandwich."""
+
+    def run(xr, xi, *args, **kw):
+        xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)
+        yr, yi = fn(xr, xi, *args, **kw)
+        return jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
+
+    return run
 
 
-def _xla_backend(xr, xi, *, inverse, planned):
+def _stockham_backend(xr, xi, *, inverse, planned, axis=-1):
+    f = fft_xla.stockham_fft
+    if axis == -2:
+        f = _swap_to_last(f)
+    return f(xr, xi, inverse=inverse)
+
+
+def _xla_backend(xr, xi, *, inverse, planned, axis=-1):
+    n = planned.fft_plan.n
+    if axis == -2:
+        if n <= plan_lib.DIRECT_MAX and n > 1:
+            # Transpose-free column DFT: contract axis -2 directly (the XLA
+            # analogue of the pencil column pass); 1/n for inverse is the
+            # leaf convention of four_step_fft's direct leaves.
+            yr, yi = fft_xla._col_dft(xr, xi, n, inverse)
+            if inverse:
+                yr, yi = yr / n, yi / n
+            return yr, yi
+        return _swap_to_last(fft_xla.four_step_fft)(xr, xi, inverse=inverse)
     return fft_xla.four_step_fft(xr, xi, inverse=inverse)
 
 
-def _pallas_backend(xr, xi, *, inverse, planned):
+def _pallas_backend(xr, xi, *, inverse, planned, axis=-1):
     from repro.kernels import ops as kernel_ops  # lazy: avoids import cycle
 
     return kernel_ops.execute_plan(
-        xr, xi, planned.fft_plan, inverse=inverse, batch_tiles=planned.batch_tiles
+        xr,
+        xi,
+        planned.fft_plan,
+        inverse=inverse,
+        batch_tiles=planned.batch_tiles,
+        axis=axis,
     )
 
 

@@ -37,12 +37,52 @@ __all__ = [
     "direct_dft",
     "cmul",
     "cmatmul",
+    "rfft_recomb",
+    "irfft_recomb",
 ]
 
 
 def cmul(ar, ai, br, bi) -> Planes:
     """Elementwise complex multiply on split planes."""
     return ar * br - ai * bi, ar * bi + ai * br
+
+
+def rfft_recomb(zr, zi, wr, wi) -> Planes:
+    """Hermitian recombination of the rfft even/odd packing (forward).
+
+    X[k] = E[k] + w[k]·O[k] for k < m, X[m] = E[0] - O[0], with
+    E/O extracted from the packed m-point spectrum Z via the Z[(m-k) % m]
+    reversal (flip+roll, no gather).  Pure jnp on the last axis — callable
+    traced (the xla/stockham backends) or from inside a Pallas kernel body
+    (``kernels.pencil.rfft_recomb_call``), so both tiers share one epilogue.
+    ``wr/wi``: e^{∓2πik/n} phasors, length ≥ m.
+    """
+    zr_f = jnp.roll(jnp.flip(zr, -1), 1, -1)  # Z[(m - k) % m]
+    zi_f = jnp.roll(jnp.flip(zi, -1), 1, -1)
+    m = zr.shape[-1]
+    er, ei = (zr + zr_f) * 0.5, (zi - zi_f) * 0.5
+    or_, oi = (zi + zi_f) * 0.5, (zr_f - zr) * 0.5
+    wr_m, wi_m = wr[..., :m], wi[..., :m]
+    tr, ti = cmul(or_, oi, wr_m, wi_m)
+    xr_out = jnp.concatenate([er + tr, er[..., 0:1] - or_[..., 0:1]], axis=-1)
+    xi_out = jnp.concatenate([ei + ti, ei[..., 0:1] - oi[..., 0:1]], axis=-1)
+    return xr_out, xi_out
+
+
+def irfft_recomb(xr, xi, wr, wi) -> Planes:
+    """Inverse of :func:`rfft_recomb`: n//2+1 bins → packed m-point spectrum.
+
+    ``wr/wi``: e^{+2πik/n} phasors, length ≥ m.
+    """
+    m = xr.shape[-1] - 1
+    xr_k, xi_k = xr[..., :m], xi[..., :m]
+    xr_f = jnp.flip(xr[..., 1:], -1)  # X[m - k], k ∈ [0, m)
+    xi_f = jnp.flip(xi[..., 1:], -1)
+    er, ei = (xr_k + xr_f) * 0.5, (xi_k - xi_f) * 0.5
+    dr, di = (xr_k - xr_f) * 0.5, (xi_k + xi_f) * 0.5
+    wr_m, wi_m = wr[..., :m], wi[..., :m]
+    or_, oi = cmul(dr, di, wr_m, wi_m)
+    return er - oi, ei + or_
 
 
 def cmatmul(ar, ai, br, bi, precision=jax.lax.Precision.HIGHEST) -> Planes:

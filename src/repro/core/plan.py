@@ -9,9 +9,29 @@ the slow tier is HBM, so the same schedule becomes:
   (the whole signal, the DFT matrix and the result co-resident in VMEM).
 * ``fused4``   — N ≤ FUSED_MAX: one ``pallas_call`` running Bailey's four-step
   ``(W_{N1}·X ⊙ T)·W_{N2}`` entirely in VMEM → **one** HBM round trip.
-* ``split``    — larger N: factor N = N_outer · N_inner recursively; each
-  level adds one HBM re-tiling pass, mirroring the paper's 2-call / 3-call
+* ``split``    — larger N: factor N = f₀ · f₁ · … (each factor in the fused
+  regime) and execute a **linearized pass program**: one HBM round trip per
+  factor, mirroring — and for N ≤ 2³² beating — the paper's 2-call / 3-call
   regimes.
+
+The split regime is compiled down to :attr:`FFTPlan.passes`, an ordered list
+of :class:`Pass` records in which **all glue is fused into the kernels**:
+each pass carries its input/output pencil views ``(pencils, stride, n)``, the
+inter-factor twiddle it must apply as a VMEM epilogue (``twiddle_after``),
+and the buffer ``order`` it leaves behind.  The executor
+(``repro.kernels.ops.execute_program``) walks this list issuing exactly
+``len(passes)`` ``pallas_call``s — no standalone HBM transpose, reshape
+re-tiling, or twiddle ``cmul`` passes in between, which is the paper's §2.3.2
+call-count discipline made literal.
+
+Pencil view convention: per batch row, the flat length-N buffer decomposes
+into ``pencils`` signals of length ``n``; pencil ``p`` occupies flat offsets
+``off(p) + stride·t`` for ``t ∈ [0, n)`` with
+``off(p) = (p // stride)·(stride·n) + (p % stride)``.  ``stride == 1`` is
+contiguous rows; ``stride == pencils`` is the interleaved-column view of the
+first factor.  The natural-order output of a two-factor program is itself a
+column view — which is why the final reorder folds into the last kernel's
+strided write instead of costing an HBM transpose.
 
 The plan is pure metadata (hashable, cached) so backends — the Pallas kernels,
 the pure-XLA fallback, and the distributed pencil driver — share one
@@ -30,8 +50,13 @@ __all__ = [
     "FFTPlan",
     "Pass",
     "plan_fft",
+    "compile_passes",
+    "program_factors",
     "balanced_split",
     "vmem_bytes",
+    "pass_hbm_bytes",
+    "program_hbm_bytes",
+    "pick_pass_chunk",
 ]
 
 #: Largest N executed as a single direct DFT matmul (one (B,N)x(N,N) GEMM).
@@ -67,38 +92,59 @@ def balanced_split(n: int, cap: int | None = None) -> tuple[int, int]:
 
 @dataclasses.dataclass(frozen=True)
 class Pass:
-    """One HBM round trip.
+    """One HBM round trip of the linearized pass program.
 
-    kind: 'direct' | 'fused4' — what the single pallas_call does.
-    n:    transform length handled by this pass.
+    kind: 'direct' | 'fused4' — the in-VMEM algorithm of the single
+          pallas_call — or 'reorder', the digit-reversal relayout pass that
+          only programs with ≥ 3 factors (N > 2³²) need for natural order.
+    n:    per-pencil transform length handled by this pass.
     n1/n2: four-step factors (fused4 only; n1*n2 == n).
+    view_in / view_out:
+          ``(pencils, stride, n)`` pencil views of the flat per-row buffer
+          (module docstring has the offset convention).  ``view_out`` differs
+          from ``view_in`` exactly when the natural-order transpose is fused
+          into this pass's strided write.
+    twiddle_after:
+          ``(n_bins, n_phases)`` — after transforming, bin ``k`` of pencil
+          ``p`` is multiplied by ``W_{n_bins·n_phases}^{k·(p % n_phases)}``
+          as a VMEM epilogue (None for the last pass).  The grid is a
+          host-cached LUT served chunk-by-chunk through a BlockSpec.
+    order: buffer ordering this pass leaves behind: 'natural' | 'pencil'.
     """
 
     kind: str
     n: int
     n1: int = 0
     n2: int = 0
+    view_in: tuple = ()
+    view_out: tuple = ()
+    twiddle_after: tuple | None = None
+    order: str = "pencil"
 
 
 @dataclasses.dataclass(frozen=True)
 class FFTPlan:
     """Factorisation of a length-``n`` transform into HBM round trips.
 
-    ``levels`` lists the outer→inner split factors; ``leaf`` is the pass that
-    executes each innermost transform.  ``hbm_round_trips`` is the figure the
-    paper tabulates as "number of kernel calls".
+    ``passes`` is the compiled, ordered natural-order pass program — the
+    HBM round-trip sequence the executor literally issues.  ``levels`` /
+    ``leaf_passes`` remain as the recursion-shaped metadata the pure-XLA
+    backend and the LUT warm-up still consume.  ``hbm_round_trips`` is the
+    figure the paper tabulates as "number of kernel calls".
     """
 
     n: int
     levels: tuple[tuple[int, int], ...]  # ((n_outer, n_inner), ...) recursion
     leaf_passes: tuple[Pass, ...]        # one leaf pass per distinct length
+    passes: tuple[Pass, ...] = ()        # linearized natural-order program
 
     @property
     def hbm_round_trips(self) -> int:
-        # Each split level re-tiles through HBM once between the two child
-        # transforms; a leaf is one trip.  For L levels of splitting the
-        # total is L + 1 (1 → direct/fused, 2 → one split, ...).
-        return len(self.levels) + 1
+        # One HBM round trip per program pass.  Two factors cover every
+        # N ≤ 2³² in two trips — one fewer than the paper's 3-call regime,
+        # because the inter-factor twiddle and the natural-order transpose
+        # are fused into the kernels instead of being standalone passes.
+        return len(self.passes)
 
     @property
     def kernel_calls(self) -> int:
@@ -129,6 +175,83 @@ def _leaf_pass(n: int) -> Pass:
     return Pass(kind="fused4", n=n, n1=n1, n2=n2)
 
 
+def program_factors(n: int, fused_max: int = FUSED_MAX) -> tuple[int, ...]:
+    """Factorize n = f₀ · f₁ · … (outer first), every factor ≤ ``fused_max``.
+
+    This is the recursion of the level tree flattened: the same splits, in
+    execution order, so the linearized program and the legacy level metadata
+    always agree on the factorisation policy.
+    """
+    if not _is_pow2(n):
+        raise ValueError(f"FFT length must be a power of two, got {n}")
+    fs: list[int] = []
+    m = n
+    while m > fused_max:
+        n_outer, n_inner = balanced_split(m, cap=fused_max)
+        fs.append(n_inner)
+        m = n_outer
+    fs.append(m)
+    fs.reverse()
+    return tuple(fs)
+
+
+@functools.lru_cache(maxsize=512)
+def compile_passes(
+    n: int, fused_max: int = FUSED_MAX, order: str = "natural"
+) -> tuple[Pass, ...]:
+    """Compile the ordered pass program for a length-``n`` transform.
+
+    One pass per factor.  Pass ``i`` transforms factor ``fᵢ`` over pencils of
+    stride ``sᵢ = ∏_{k>i} f_k`` and applies the inter-factor twiddle
+    ``W^{kᵢ·(p % sᵢ)}`` as its VMEM epilogue.  With two factors the final
+    natural-order transpose is fused into the last pass's strided write
+    (its ``view_out`` is the column view of the output buffer); with three
+    or more factors (N > 2³²) natural order needs one explicit ``reorder``
+    pass, and ``order='pencil'`` skips it for fft→pointwise→ifft pipelines.
+    """
+    if order not in ("natural", "pencil"):
+        raise ValueError(f"order must be 'natural' or 'pencil', got {order!r}")
+    fs = program_factors(n, fused_max)
+    last = len(fs) - 1
+    passes: list[Pass] = []
+    stride = n
+    for i, f in enumerate(fs):
+        stride //= f
+        leaf = _leaf_pass(f)
+        view_in = (n // f, stride, f)
+        view_out = view_in
+        pass_order = "pencil"
+        if i == last:
+            if order == "natural" and last == 1:
+                # Fused natural-order write: out pencil k₀ at offset k₀,
+                # stride f₀ — the column view of the output buffer.
+                view_out = (fs[0], fs[0], f)
+                pass_order = "natural"
+            elif last == 0:
+                # Single-factor program: the kernel orders internally and
+                # program-level pencil layout degenerates to natural.
+                pass_order = "natural"
+        passes.append(
+            Pass(
+                kind=leaf.kind,
+                n=f,
+                n1=leaf.n1,
+                n2=leaf.n2,
+                view_in=view_in,
+                view_out=view_out,
+                twiddle_after=None if i == last else (f, stride),
+                order=pass_order,
+            )
+        )
+    if order == "natural" and last >= 2:
+        # Digit-reversal relayout: only N > FUSED_MAX² programs pay it.
+        flat = (1, 1, n)
+        passes.append(
+            Pass(kind="reorder", n=n, view_in=flat, view_out=flat, order="natural")
+        )
+    return tuple(passes)
+
+
 @functools.lru_cache(maxsize=512)
 def plan_fft(n: int, fused_max: int = FUSED_MAX) -> FFTPlan:
     """Plan a length-``n`` power-of-two complex FFT."""
@@ -153,7 +276,12 @@ def plan_fft(n: int, fused_max: int = FUSED_MAX) -> FFTPlan:
     else:
         leaf_lengths = {n}
     leaves = tuple(sorted((_leaf_pass(m) for m in leaf_lengths), key=lambda p: p.n))
-    return FFTPlan(n=n, levels=tuple(levels), leaf_passes=leaves)
+    return FFTPlan(
+        n=n,
+        levels=tuple(levels),
+        leaf_passes=leaves,
+        passes=compile_passes(n, fused_max, "natural"),
+    )
 
 
 def vmem_bytes(p: Pass, batch_tile: int) -> int:
@@ -183,17 +311,88 @@ def pick_batch_tile(p: Pass, budget: int = 8 * 1024 * 1024) -> int:
     return bt
 
 
-def describe(n: int) -> str:
-    """Human-readable schedule, e.g. for logging/EXPERIMENTS.md."""
+def pass_hbm_bytes(p: Pass, batch: int = 1) -> int:
+    """Modeled HBM traffic of one program pass, split-complex float32.
+
+    Signal read + signal write, plus the chunked twiddle LUT (streamed once
+    per pass through its BlockSpec) and the transform LUTs (pinned to block
+    (0, 0), so fetched from HBM once regardless of grid size).  This is the
+    figure ``launch.dryrun`` / ``analysis.roofline`` report per pass so the
+    round-trip count is observable, and what the tests assert.
+    """
+    f32 = 4
+    if p.kind == "reorder":
+        return 2 * batch * p.n * 2 * f32
+    pencils, _stride, f = p.view_in if p.view_in else (1, 1, p.n)
+    sig = batch * pencils * f * 2 * f32
+    tw = 0
+    if p.twiddle_after:
+        tw = p.twiddle_after[0] * p.twiddle_after[1] * 2 * f32
+    if p.kind == "direct":
+        luts = p.n * p.n * 2 * f32
+    else:
+        luts = (p.n1 * p.n1 + p.n2 * p.n2 + p.n1 * p.n2) * 2 * f32
+    return 2 * sig + tw + luts
+
+
+def program_hbm_bytes(passes: tuple[Pass, ...], batch: int = 1) -> int:
+    """Total modeled HBM traffic of a pass program."""
+    return sum(pass_hbm_bytes(p, batch) for p in passes)
+
+
+def _pass_chunk_bytes(p: Pass, c: int) -> int:
+    """VMEM working set of one grid step of a pencil pass with chunk ``c``."""
+    f32 = 4
+    sig = p.n * c * 2 * f32
+    tw = sig if p.twiddle_after else 0
+    if p.kind == "direct":
+        luts = p.n * p.n * 2 * f32
+    else:
+        luts = (p.n1 * p.n1 + p.n2 * p.n2 + p.n1 * p.n2) * 2 * f32
+    return 3 * sig + tw + luts  # in, intermediate, out (+ twiddle slab)
+
+
+def pick_pass_chunk(p: Pass, budget: int = 8 * 1024 * 1024) -> int:
+    """Per-grid-step chunk (columns for strided passes, rows for contiguous
+    ones) — largest power of two fitting the VMEM budget.
+
+    The budget is binding: for large factors the chunk drops below one
+    128-lane tile (padded sublanes beat a working set that Mosaic cannot
+    place in VMEM at all — interpret-mode CI would never catch that)."""
+    pencils, stride, _f = p.view_in
+    axis = stride if stride > 1 else pencils
+    c = axis
+    while c > 1 and _pass_chunk_bytes(p, c) > budget:
+        c //= 2
+    return max(min(c, axis), 1)
+
+
+def describe(n: int, batch: int = 1) -> str:
+    """Human-readable pass program, e.g. for logging/EXPERIMENTS.md."""
     p = plan_fft(n)
     parts = [f"N={n}: {p.hbm_round_trips} HBM round trip(s)"]
-    m = n
-    for no, ni in p.levels:
-        parts.append(f"split {m} -> {no} x {ni}")
-        m = no
-    for leaf in p.leaf_passes:
-        if leaf.kind == "direct":
-            parts.append(f"leaf direct DFT n={leaf.n}")
+    for i, ps in enumerate(p.passes):
+        mb = pass_hbm_bytes(ps, batch) / 1e6
+        if ps.kind == "reorder":
+            parts.append(f"pass {i}: digit-reversal reorder (~{mb:.1f} MB)")
+            continue
+        pencils, stride, f = ps.view_in
+        algo = (
+            f"direct DFT n={f}"
+            if ps.kind == "direct"
+            else f"fused four-step n={f} ({ps.n1} x {ps.n2})"
+        )
+        if pencils == 1:
+            layout = "whole-signal"
+        elif stride == 1:
+            layout = f"{pencils} rows"
         else:
-            parts.append(f"leaf fused four-step n={leaf.n} ({leaf.n1} x {leaf.n2})")
+            layout = f"{pencils} cols stride={stride}"
+        tw = (
+            f" + twiddle {ps.twiddle_after[0]}x{ps.twiddle_after[1]}"
+            if ps.twiddle_after
+            else ""
+        )
+        fold = " -> natural order (fused write)" if ps.view_out != ps.view_in else ""
+        parts.append(f"pass {i}: {layout} {algo}{tw}{fold} (~{mb:.1f} MB)")
     return "; ".join(parts)

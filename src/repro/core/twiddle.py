@@ -26,6 +26,7 @@ import numpy as np
 __all__ = [
     "dft_matrix",
     "twiddle_grid",
+    "pass_twiddle",
     "stage_twiddle",
     "traced_twiddle",
     "rfft_recomb_twiddle",
@@ -75,6 +76,22 @@ def twiddle_grid(
 ) -> tuple[np.ndarray, np.ndarray]:
     """Four-step inter-factor twiddle T[k1, m2] = exp(∓2πi·k1·m2/(n1·n2))."""
     return _twiddle_grid_np(n1, n2, inverse)
+
+
+def pass_twiddle(
+    n_bins: int, n_phases: int, inverse: bool = False
+) -> tuple[np.ndarray, np.ndarray]:
+    """Inter-factor twiddle grid for one pass of the linearized program.
+
+    ``T[k, p] = exp(∓2πi·k·p / (n_bins·n_phases))`` — multiplied into bin
+    ``k`` of pencil ``p`` as the pass kernel's VMEM epilogue.  Host-cached
+    once per (bins, phases) pair and served to the kernel chunk-by-chunk
+    through a BlockSpec, so the table is built once and streamed at HBM
+    bandwidth exactly once per pass (the paper's texture table, §2.3.1).
+    Identical values to :func:`twiddle_grid` — the four-step in-VMEM grid and
+    the program-level grid are the same object at different tiers.
+    """
+    return _twiddle_grid_np(n_bins, n_phases, inverse)
 
 
 @functools.lru_cache(maxsize=512)

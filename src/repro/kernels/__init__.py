@@ -2,12 +2,22 @@
 
 dft_matmul  direct DFT GEMM (N <= 1024, paper's 1-call regime)
 fft4step    fused four-step (N <= 65536, one HBM round trip)
-ops         jit wrappers + plan-driven recursion (2-/3-call regimes)
+pencil      strided-pencil pass kernels (split regime: in-place column
+            passes, fused natural-order writes, rfft recombination)
+ops         jit wrappers + the linearized pass-program executor
 ref         oracles (naive float64 DFT, jnp.fft, four-step reference)
 """
 
-from repro.kernels import ops, ref
-from repro.kernels.dft_matmul import dft_matmul_call
-from repro.kernels.fft4step import fft4step_call
+from repro.kernels import ops, pencil, ref
+from repro.kernels.dft_matmul import dft_matmul_call, dft_tile
+from repro.kernels.fft4step import fft4step_call, four_step_tile
 
-__all__ = ["ops", "ref", "dft_matmul_call", "fft4step_call"]
+__all__ = [
+    "ops",
+    "pencil",
+    "ref",
+    "dft_matmul_call",
+    "dft_tile",
+    "fft4step_call",
+    "four_step_tile",
+]

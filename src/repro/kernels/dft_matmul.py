@@ -14,6 +14,12 @@ which is exactly the texture-LUT behaviour of §2.3.1 (computed once, served
 from the fast tier).  Complex arithmetic uses the 3-GEMM Karatsuba split.
 Inverse scaling (1/N) is folded into the W operand by the wrapper: zero extra
 arithmetic, the LUT *is* the scaled table.
+
+:func:`dft_tile` is the reusable VMEM tile transform the pass-program
+kernels (``repro.kernels.pencil``) embed for their strided-column and
+transposed-write passes, and ``dft_matmul_call`` grows a post-GEMM per-bin
+twiddle epilogue (``twiddle``) so a multiplicative phase stage rides the
+same HBM round trip.
 """
 
 from __future__ import annotations
@@ -24,23 +30,38 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.fft_xla import cmul
 from repro.kernels.pallas_compat import compiler_params
 
-__all__ = ["dft_matmul_call"]
+__all__ = ["dft_matmul_call", "dft_tile"]
 
 
-def _kernel(x_r, x_i, w_r, w_i, o_r, o_i):
-    xr, xi = x_r[...], x_i[...]
-    wr, wi = w_r[...], w_i[...]
-    dot = functools.partial(
-        jnp.dot, preferred_element_type=jnp.float32
-    )
-    # Karatsuba: 3 real GEMMs instead of 4.
+def dft_tile(xr, xi, wr, wi):
+    """Y = X @ W on a VMEM-resident (bt, n) tile — Karatsuba, 3 real GEMMs.
+
+    Pure jnp on arrays already in VMEM; callable from any Pallas kernel body.
+    """
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
     k1 = dot(xr + xi, wr)
     k2 = dot(xr, wi - wr)
     k3 = dot(xi, wr + wi)
-    o_r[...] = k1 - k3
-    o_i[...] = k1 + k2
+    return k1 - k3, k1 + k2
+
+
+def _make_kernel(has_epilogue: bool):
+    def kernel(x_r, x_i, w_r, w_i, *rest):
+        if has_epilogue:
+            e_r, e_i, o_r, o_i = rest
+        else:
+            o_r, o_i = rest
+        yr, yi = dft_tile(x_r[...], x_i[...], w_r[...], w_i[...])
+        if has_epilogue:
+            # Post-GEMM per-bin twiddle: y[b, k] *= e[k] (split complex).
+            yr, yi = cmul(yr, yi, e_r[...], e_i[...])
+        o_r[...] = yr
+        o_i[...] = yi
+
+    return kernel
 
 
 def dft_matmul_call(
@@ -50,22 +71,36 @@ def dft_matmul_call(
     wi: jax.Array,
     *,
     batch_tile: int,
+    twiddle: tuple[jax.Array, jax.Array] | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """y = x @ W for split-complex x:(B, N), W:(N, N); B % batch_tile == 0."""
+    """y = x @ W for split-complex x:(B, N), W:(N, N); B % batch_tile == 0.
+
+    ``twiddle`` — optional (real, imag) per-bin phasors of shape (N,),
+    multiplied into the result in the VMEM epilogue.
+    """
     b, n = xr.shape
     assert b % batch_tile == 0, (b, batch_tile)
     grid = (b // batch_tile,)
     sig_spec = pl.BlockSpec((batch_tile, n), lambda i: (i, 0))
     lut_spec = pl.BlockSpec((n, n), lambda i: (0, 0))  # VMEM-resident LUT
+    in_specs = [sig_spec, sig_spec, lut_spec, lut_spec]
+    operands = [xr, xi, wr, wi]
+    if twiddle is not None:
+        er, ei = twiddle
+        er = jnp.asarray(er, jnp.float32).reshape(1, n)
+        ei = jnp.asarray(ei, jnp.float32).reshape(1, n)
+        tw_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+        in_specs += [tw_spec, tw_spec]
+        operands += [er, ei]
     out_shape = [
         jax.ShapeDtypeStruct((b, n), jnp.float32),
         jax.ShapeDtypeStruct((b, n), jnp.float32),
     ]
     fn = pl.pallas_call(
-        _kernel,
+        _make_kernel(twiddle is not None),
         grid=grid,
-        in_specs=[sig_spec, sig_spec, lut_spec, lut_spec],
+        in_specs=in_specs,
         out_specs=[sig_spec, sig_spec],
         out_shape=out_shape,
         interpret=interpret,
@@ -73,4 +108,4 @@ def dft_matmul_call(
             dimension_semantics=("parallel",)
         ),
     )
-    return tuple(fn(xr, xi, wr, wi))
+    return tuple(fn(*operands))

@@ -16,12 +16,14 @@ the output tile are co-resident in VMEM; the LUT operands are pinned to block
 (0, 0) for every grid step so Mosaic hoists their copy out of the batch loop
 (texture-memory analogue).  The batch grid dimension is ``parallel``.
 
-In-kernel dataflow (all VMEM, no HBM traffic):
-  x      (bt, n)   → view (bt, n1, n2) → transpose (n1, bt, n2)
-  GEMM-1 (n1, n1) @ (n1, bt·n2)
-  twiddle broadcast over bt
-  GEMM-2 (n1·bt, n2) @ (n2, n2)
-  out    (n1, bt, n2) → transpose (bt, n2, n1) → flatten (bt, n)
+The whole VMEM dataflow lives in :func:`four_step_tile` so the pass-program
+kernels (``repro.kernels.pencil``) embed the same four-step engine inside
+their strided-column and transposed-write passes — the tile function is the
+unit of fusion.  On top of the selectable output layout (``natural_order``),
+``fft4step_call`` accepts a post-GEMM per-bin twiddle (``twiddle_after``)
+applied in the epilogue before the write, so a multiplicative phase stage
+(modulation, delay, inter-level twiddle of a follow-on factor) costs zero
+extra HBM passes.
 
 Both GEMMs are plain 2-D contractions with 128-aligned operand shapes for
 n1, n2 ≥ 128 (N ≥ 16384); smaller factors pad sublanes but stay correct.
@@ -37,12 +39,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.fft_xla import cmul
 from repro.kernels.pallas_compat import compiler_params
 
-__all__ = ["fft4step_call"]
+__all__ = ["fft4step_call", "four_step_tile", "cgemm_tile"]
 
 
-def _cgemm(ar, ai, br, bi):
+def cgemm_tile(ar, ai, br, bi):
     """Karatsuba complex GEMM on split planes: 3 real MXU GEMMs."""
     dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
     k1 = dot(ar + ai, br)
@@ -51,36 +54,59 @@ def _cgemm(ar, ai, br, bi):
     return k1 - k3, k1 + k2
 
 
-def _make_kernel(n1: int, n2: int, natural_order: bool):
-    def kernel(x_r, x_i, w1_r, w1_i, t_r, t_i, w2_r, w2_i, o_r, o_i):
-        bt = x_r.shape[0]
-        n = n1 * n2
-        # (bt, n) → (n1, bt·n2): put the contracted factor on rows.
-        xr = x_r[...].reshape(bt, n1, n2).transpose(1, 0, 2).reshape(n1, bt * n2)
-        xi = x_i[...].reshape(bt, n1, n2).transpose(1, 0, 2).reshape(n1, bt * n2)
-        # GEMM-1: column DFTs.  A = W1 @ X  ((n1,n1) @ (n1, bt·n2)).
-        ar, ai = _cgemm(w1_r[...], w1_i[...], xr, xi)
-        # Twiddle: A viewed (n1, bt, n2) ⊙ T[n1, 1, n2].
-        ar = ar.reshape(n1, bt, n2)
-        ai = ai.reshape(n1, bt, n2)
-        tr = t_r[...][:, None, :]
-        ti = t_i[...][:, None, :]
-        br = ar * tr - ai * ti
-        bi = ar * ti + ai * tr
-        # GEMM-2: row DFTs.  C = B @ W2  ((n1·bt, n2) @ (n2, n2)).
-        cr, ci = _cgemm(
-            br.reshape(n1 * bt, n2), bi.reshape(n1 * bt, n2), w2_r[...], w2_i[...]
-        )
-        cr = cr.reshape(n1, bt, n2)
-        ci = ci.reshape(n1, bt, n2)
-        if natural_order:
-            # Y[b, k2·n1 + k1] = C[k1, b, k2] — VMEM-internal relayout.
-            o_r[...] = cr.transpose(1, 2, 0).reshape(bt, n)
-            o_i[...] = ci.transpose(1, 2, 0).reshape(bt, n)
+def four_step_tile(
+    xr, xi, w1r, w1i, tr, ti, w2r, w2i, n1: int, n2: int, natural_order: bool = True
+):
+    """The four-step dataflow on a VMEM-resident (bt, n1·n2) tile.
+
+    Pure jnp on arrays already in VMEM — callable from any Pallas kernel
+    body (this file's batch kernel, the pencil pass kernels) or traced
+    directly for reference.  Returns (yr, yi) of shape (bt, n1·n2), in
+    natural or pencil (k1-major) order.
+    """
+    bt = xr.shape[0]
+    n = n1 * n2
+    # (bt, n) → (n1, bt·n2): put the contracted factor on rows.
+    xr = xr.reshape(bt, n1, n2).transpose(1, 0, 2).reshape(n1, bt * n2)
+    xi = xi.reshape(bt, n1, n2).transpose(1, 0, 2).reshape(n1, bt * n2)
+    # GEMM-1: column DFTs.  A = W1 @ X  ((n1,n1) @ (n1, bt·n2)).
+    ar, ai = cgemm_tile(w1r, w1i, xr, xi)
+    # Twiddle: A viewed (n1, bt, n2) ⊙ T[n1, 1, n2].
+    ar = ar.reshape(n1, bt, n2)
+    ai = ai.reshape(n1, bt, n2)
+    trb = tr[:, None, :]
+    tib = ti[:, None, :]
+    br = ar * trb - ai * tib
+    bi = ar * tib + ai * trb
+    # GEMM-2: row DFTs.  C = B @ W2  ((n1·bt, n2) @ (n2, n2)).
+    cr, ci = cgemm_tile(
+        br.reshape(n1 * bt, n2), bi.reshape(n1 * bt, n2), w2r, w2i
+    )
+    cr = cr.reshape(n1, bt, n2)
+    ci = ci.reshape(n1, bt, n2)
+    if natural_order:
+        # Y[b, k2·n1 + k1] = C[k1, b, k2] — VMEM-internal relayout.
+        return cr.transpose(1, 2, 0).reshape(bt, n), ci.transpose(1, 2, 0).reshape(bt, n)
+    # Pencil (k1-major) layout: caller composes/undoes ordering.
+    return cr.transpose(1, 0, 2).reshape(bt, n), ci.transpose(1, 0, 2).reshape(bt, n)
+
+
+def _make_kernel(n1: int, n2: int, natural_order: bool, has_epilogue: bool):
+    def kernel(x_r, x_i, w1_r, w1_i, t_r, t_i, w2_r, w2_i, *rest):
+        if has_epilogue:
+            e_r, e_i, o_r, o_i = rest
         else:
-            # Pencil (k1-major) layout: caller composes/undoes ordering.
-            o_r[...] = cr.transpose(1, 0, 2).reshape(bt, n)
-            o_i[...] = ci.transpose(1, 0, 2).reshape(bt, n)
+            o_r, o_i = rest
+        yr, yi = four_step_tile(
+            x_r[...], x_i[...],
+            w1_r[...], w1_i[...], t_r[...], t_i[...], w2_r[...], w2_i[...],
+            n1, n2, natural_order,
+        )
+        if has_epilogue:
+            # Post-GEMM per-position twiddle: y[b, j] *= e[j] (split complex).
+            yr, yi = cmul(yr, yi, e_r[...], e_i[...])
+        o_r[...] = yr
+        o_i[...] = yi
 
     return kernel
 
@@ -97,9 +123,19 @@ def fft4step_call(
     *,
     batch_tile: int,
     natural_order: bool = True,
+    twiddle_after: tuple[jax.Array, jax.Array] | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused four-step FFT: x (B, n1·n2) split-complex; B % batch_tile == 0."""
+    """Fused four-step FFT: x (B, n1·n2) split-complex; B % batch_tile == 0.
+
+    ``twiddle_after`` — optional (real, imag) per-output-position phasors of
+    shape (n,): multiplied into the result in the VMEM epilogue (after the
+    ``natural_order`` relayout), so phase post-processing rides the same
+    HBM round trip.  The pass program's *inter-factor* twiddle goes through
+    ``kernels.pencil``'s column kernel instead (it is per-pencil-phase, not
+    per-position); this call-level hook is the public surface for per-bin
+    phase stages — modulation, delay, fftshift-by-phase-ramp.
+    """
     b, n = xr.shape
     n1 = w1r.shape[0]
     n2 = w2r.shape[0]
@@ -110,14 +146,23 @@ def fft4step_call(
     lut1 = pl.BlockSpec((n1, n1), lambda i: (0, 0))
     lutt = pl.BlockSpec((n1, n2), lambda i: (0, 0))
     lut2 = pl.BlockSpec((n2, n2), lambda i: (0, 0))
+    in_specs = [sig, sig, lut1, lut1, lutt, lutt, lut2, lut2]
+    operands = [xr, xi, w1r, w1i, twr, twi, w2r, w2i]
+    if twiddle_after is not None:
+        er, ei = twiddle_after
+        er = jnp.asarray(er, jnp.float32).reshape(1, n)
+        ei = jnp.asarray(ei, jnp.float32).reshape(1, n)
+        lute = pl.BlockSpec((1, n), lambda i: (0, 0))
+        in_specs += [lute, lute]
+        operands += [er, ei]
     out_shape = [
         jax.ShapeDtypeStruct((b, n), jnp.float32),
         jax.ShapeDtypeStruct((b, n), jnp.float32),
     ]
     fn = pl.pallas_call(
-        _make_kernel(n1, n2, natural_order),
+        _make_kernel(n1, n2, natural_order, twiddle_after is not None),
         grid=grid,
-        in_specs=[sig, sig, lut1, lut1, lutt, lutt, lut2, lut2],
+        in_specs=in_specs,
         out_specs=[sig, sig],
         out_shape=out_shape,
         interpret=interpret,
@@ -125,4 +170,4 @@ def fft4step_call(
             dimension_semantics=("parallel",)
         ),
     )
-    return tuple(fn(xr, xi, w1r, w1i, twr, twi, w2r, w2i))
+    return tuple(fn(*operands))

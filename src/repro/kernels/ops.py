@@ -1,27 +1,37 @@
 """Jit-ready wrappers around the Pallas FFT kernels.
 
-``ops.execute_plan`` *consumes* an :class:`repro.core.plan.FFTPlan` — the
-split levels and leaf passes are read off the plan rather than re-derived by
-calling ``balanced_split`` at every recursion, so the schedule the planner
-(and the tests) reason about is exactly the schedule that executes:
+``ops.execute_plan`` *consumes* an :class:`repro.core.plan.FFTPlan` by
+walking its **linearized pass program** (:attr:`FFTPlan.passes`) with
+:func:`execute_program` — an iterative executor, not a recursion.  Every
+program pass is exactly one ``pallas_call`` HBM round trip:
 
-* leaf ``direct``   → one :func:`dft_matmul_call`
-* leaf ``fused4``   → one :func:`fft4step_call` (one HBM round trip)
-* each plan level   → ops-level split (the paper's 2-call / 3-call regimes):
-  reshape → column pass (kernel) → twiddle → row pass (kernel) →
-  natural-order transpose, recursing per the plan's level table.
+* whole-signal pass  → :func:`dft_matmul_call` / :func:`fft4step_call`
+  (the ≤ FUSED_MAX one-call regimes);
+* strided-column pass → :func:`~repro.kernels.pencil.cols_pass_call`, which
+  reads/writes the ``(b, n1, n2)`` view's columns in place and applies the
+  inter-factor twiddle as its VMEM epilogue;
+* contiguous-row pass → :func:`~repro.kernels.pencil.rows_natural_call`
+  when the natural-order transpose is fused into its strided write, or the
+  plain leaf kernel for pencil-order output.
+
+Between passes the executor only reshapes (row-major views — no data
+movement); there are **zero** standalone HBM ``swapaxes``/transpose or
+twiddle ``cmul`` ops in the schedule, which is what makes the split regime
+match the paper's §2.3.2 call-count discipline (and beat it: two round trips
+cover every N ≤ 2³²).  The tests assert this over the jaxpr.
 
 Responsibilities handled here so kernels stay minimal: batch flattening and
 tile padding, LUT construction (host-cached, inverse scaling folded into W2 /
-W), interpret-mode selection (auto on CPU), and plan-consistent recursion.
-``ops.fft``/``ops.ifft`` remain as plan-deriving conveniences.
+W; the inter-factor twiddle grids cached per (bins, phases) pair), interpret-
+mode selection (auto on CPU), and per-pass chunk sizing against the VMEM
+budget.  ``ops.fft``/``ops.ifft`` remain as plan-deriving conveniences.
 """
 
 from __future__ import annotations
 
 import functools
 import os
-from typing import Mapping, Tuple
+from typing import Mapping, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,13 +39,13 @@ import numpy as np
 
 from repro.core import plan as plan_lib
 from repro.core import twiddle as tw
-from repro.core.fft_xla import cmul
 from repro.kernels.dft_matmul import dft_matmul_call
 from repro.kernels.fft4step import fft4step_call
+from repro.kernels import pencil
 
 Planes = Tuple[jax.Array, jax.Array]
 
-__all__ = ["execute_plan", "fft", "ifft", "should_interpret"]
+__all__ = ["execute_plan", "execute_program", "fft", "ifft", "should_interpret"]
 
 
 def should_interpret() -> bool:
@@ -65,6 +75,19 @@ def _fused_luts(n1: int, n2: int, inverse: bool):
     return w1r, w1i, tr, ti, w2r, w2i
 
 
+@functools.lru_cache(maxsize=64)
+def _pass_twiddle_luts(n_bins: int, n_phases: int, inverse: bool):
+    """Host-cached inter-factor twiddle grid for a program pass's epilogue
+    (served to the kernel chunk-by-chunk through its BlockSpec)."""
+    return tw.pass_twiddle(n_bins, n_phases, inverse)
+
+
+def _transform_luts(p: plan_lib.Pass, inverse: bool):
+    if p.kind == "direct":
+        return _direct_luts(p.n, inverse)
+    return _fused_luts(p.n1, p.n2, inverse)
+
+
 def _pad_batch(xr, xi, bt):
     b = xr.shape[0]
     pad = (-b) % bt
@@ -80,9 +103,10 @@ def _tile_for(p: plan_lib.Pass, batch_tiles: Mapping[int, int] | None) -> int:
     return plan_lib.pick_batch_tile(p)
 
 
-def _leaf_kernel(xr, xi, p: plan_lib.Pass, inverse, interpret, batch_tiles) -> Planes:
-    """Single-pallas_call transform of the last axis (2-D input), executing
-    the plan's leaf :class:`~repro.core.plan.Pass` as scheduled."""
+def _leaf_kernel(
+    xr, xi, p: plan_lib.Pass, inverse, interpret, batch_tiles, natural_order=True
+) -> Planes:
+    """Single-pallas_call transform of the last axis (2-D input)."""
     if p.n == 1:
         return xr, xi
     bt = _tile_for(p, batch_tiles)
@@ -104,41 +128,100 @@ def _leaf_kernel(xr, xi, p: plan_lib.Pass, inverse, interpret, batch_tiles) -> P
         jnp.asarray(w2r),
         jnp.asarray(w2i),
         batch_tile=bt,
+        natural_order=natural_order,
         interpret=interpret,
     )
     return yr[:b], yi[:b]
 
 
-def _transform(xr, xi, n, fft_plan, inverse, interpret, batch_tiles) -> Planes:
-    """Transform last axis of 2-D (B, n) input, walking the plan's levels."""
-    level = fft_plan.level_for(n)
-    if level is None:
-        return _leaf_kernel(
-            xr, xi, fft_plan.leaf_pass(n), inverse, interpret, batch_tiles
+def execute_program(
+    xr: jax.Array,
+    xi: jax.Array,
+    passes: Sequence[plan_lib.Pass],
+    *,
+    inverse: bool = False,
+    interpret: bool | None = None,
+    batch_tiles: Mapping[int, int] | None = None,
+) -> Planes:
+    """Walk a linearized pass program over 2-D (B, n) split planes.
+
+    One ``pallas_call`` per pass; the only ops between passes are row-major
+    reshapes (views, no HBM traffic).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    b, n = xr.shape
+    for p in passes:
+        if p.kind == "reorder":
+            # Digit-reversal relayout — only programs with ≥ 3 factors
+            # (N > 2³²) reach this; plain XLA transpose, one HBM round trip.
+            fs = [q.n for q in passes if q.kind != "reorder"]
+            perm = (0,) + tuple(range(len(fs), 0, -1))
+            xr = xr.reshape(b, *fs).transpose(perm).reshape(b, n)
+            xi = xi.reshape(b, *fs).transpose(perm).reshape(b, n)
+            continue
+        pencils, stride, f = p.view_in
+        if pencils == 1:
+            # Whole-signal pass: the ≤ FUSED_MAX one-call regime.
+            xr, xi = _leaf_kernel(
+                xr, xi, p, inverse, interpret, batch_tiles,
+                natural_order=p.order == "natural",
+            )
+            continue
+        luts = _transform_luts(p, inverse)
+        chunk = plan_lib.pick_pass_chunk(p)
+        if stride == 1:
+            if p.view_out != p.view_in:
+                # Row pass with the natural-order transpose fused into its
+                # strided write: (b, p, f) → (b, f, p) flattens naturally.
+                xr3 = xr.reshape(b, pencils, f)
+                xi3 = xi.reshape(b, pencils, f)
+                yr3, yi3 = pencil.rows_natural_call(
+                    xr3, xi3, luts, kind=p.kind, n1=p.n1, n2=p.n2,
+                    chunk=chunk, interpret=interpret,
+                )
+                xr = yr3.reshape(b, n)
+                xi = yi3.reshape(b, n)
+            else:
+                # Pencil-order row pass: contiguous rows, plain leaf kernel.
+                rr = xr.reshape(b * pencils, f)
+                ri = xi.reshape(b * pencils, f)
+                rr, ri = _leaf_kernel(
+                    rr, ri, p, inverse, interpret, batch_tiles
+                )
+                xr = rr.reshape(b, n)
+                xi = ri.reshape(b, n)
+            continue
+        # Strided-column pass (+ fused inter-factor twiddle epilogue).
+        groups = pencils // stride
+        xr3 = xr.reshape(b * groups, f, stride)
+        xi3 = xi.reshape(b * groups, f, stride)
+        twiddle = None
+        if p.twiddle_after is not None:
+            twiddle = _pass_twiddle_luts(*p.twiddle_after, inverse)
+        xr3, xi3 = pencil.cols_pass_call(
+            xr3, xi3, luts, twiddle, kind=p.kind, n1=p.n1, n2=p.n2,
+            chunk=chunk, interpret=interpret,
         )
-    # Split level — one extra HBM round trip (paper's 2nd/3rd kernel call).
-    n1, n2 = level
-    b = xr.shape[0]
-    xr = xr.reshape(b, n1, n2)
-    xi = xi.reshape(b, n1, n2)
-    # Column pass: transform over n1.  Fold the batch into rows so the leaf
-    # kernel always sees (rows, n_leaf).
-    xr = jnp.swapaxes(xr, -1, -2).reshape(b * n2, n1)
-    xi = jnp.swapaxes(xi, -1, -2).reshape(b * n2, n1)
-    xr, xi = _transform(xr, xi, n1, fft_plan, inverse, interpret, batch_tiles)
-    # Twiddle in (n2, n1) layout (traced: too large to embed).
-    tr, ti = tw.traced_twiddle(n2, n1, inverse)
-    xr = xr.reshape(b, n2, n1)
-    xi = xi.reshape(b, n2, n1)
-    xr, xi = cmul(xr, xi, tr, ti)
-    # Row pass: transform over n2.
-    xr = jnp.swapaxes(xr, -1, -2).reshape(b * n1, n2)
-    xi = jnp.swapaxes(xi, -1, -2).reshape(b * n1, n2)
-    xr, xi = _transform(xr, xi, n2, fft_plan, inverse, interpret, batch_tiles)
-    # Natural order: X[k1 + n1·k2] = C[k1, k2] → flatten Cᵀ.
-    xr = jnp.swapaxes(xr.reshape(b, n1, n2), -1, -2).reshape(b, n1 * n2)
-    xi = jnp.swapaxes(xi.reshape(b, n1, n2), -1, -2).reshape(b, n1 * n2)
+        xr = xr3.reshape(b, n)
+        xi = xi3.reshape(b, n)
     return xr, xi
+
+
+def _cols_plan_pass(fft_plan: plan_lib.FFTPlan, stride: int) -> plan_lib.Pass:
+    """A synthetic strided-column pass running the whole plan's transform
+    down the -2 axis of an (..., n, stride) view — the distributed pencil
+    driver's local column transform, no materialized swapaxes."""
+    leaf = fft_plan.passes[0]
+    return plan_lib.Pass(
+        kind=leaf.kind,
+        n=fft_plan.n,
+        n1=leaf.n1,
+        n2=leaf.n2,
+        view_in=(stride, stride, fft_plan.n),
+        view_out=(stride, stride, fft_plan.n),
+        order="natural",
+    )
 
 
 def execute_plan(
@@ -149,25 +232,69 @@ def execute_plan(
     inverse: bool = False,
     interpret: bool | None = None,
     batch_tiles: Mapping[int, int] | None = None,
+    order: str = "natural",
+    axis: int = -1,
 ) -> Planes:
     """Execute a pre-computed :class:`~repro.core.plan.FFTPlan` with the
-    Pallas kernels over the last axis (any leading batch dims).
+    Pallas kernels over ``axis`` (-1 or -2; any leading batch dims).
 
     ``batch_tiles`` (leaf length → tile) lets a :class:`PlannedFFT` carry the
     negotiated tile sizes; unlisted leaves fall back to the VMEM-budget pick.
+    ``order='pencil'`` leaves the spectrum in k₁-major pencil layout (the
+    fft→pointwise→ifft fast path).  ``axis=-2`` transforms the second-to-last
+    axis in place via the strided-column kernel when the plan is single-pass
+    (the distributed pencil driver's case), falling back to a transpose
+    sandwich otherwise.
     """
     if interpret is None:
         interpret = should_interpret()
+    if axis == -2:
+        n, q = xr.shape[-2:]
+        if n != fft_plan.n:
+            raise ValueError(f"plan is for n={fft_plan.n}, axis -2 has n={n}")
+        lead = xr.shape[:-2]
+        b = int(np.prod(lead)) if lead else 1
+        if len(fft_plan.passes) == 1 and fft_plan.n > 1:
+            p = _cols_plan_pass(fft_plan, q)
+            yr, yi = pencil.cols_pass_call(
+                xr.reshape(b, n, q),
+                xi.reshape(b, n, q),
+                _transform_luts(p, inverse),
+                kind=p.kind,
+                n1=p.n1,
+                n2=p.n2,
+                chunk=plan_lib.pick_pass_chunk(p),
+                interpret=interpret,
+            )
+            return yr.reshape(*lead, n, q), yi.reshape(*lead, n, q)
+        xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)
+        yr, yi = execute_plan(
+            xr, xi, fft_plan, inverse=inverse, interpret=interpret,
+            batch_tiles=batch_tiles, order=order,
+        )
+        return jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
+    if axis != -1:
+        raise ValueError(f"execute_plan handles axis -1 or -2, got {axis}")
     n = xr.shape[-1]
     if n != fft_plan.n:
         raise ValueError(f"plan is for n={fft_plan.n}, input has n={n}")
+    passes = (
+        fft_plan.passes
+        if order == "natural"
+        else plan_lib.compile_passes(fft_plan.n, order=order)
+    )
     lead = xr.shape[:-1]
     b = int(np.prod(lead)) if lead else 1
-    yr, yi = _transform(
-        xr.reshape(b, n), xi.reshape(b, n), n, fft_plan, inverse, interpret, batch_tiles
+    yr, yi = execute_program(
+        xr.reshape(b, n),
+        xi.reshape(b, n),
+        passes,
+        inverse=inverse,
+        interpret=interpret,
+        batch_tiles=batch_tiles,
     )
-    # Inverse scaling is folded into the leaf LUTs (1/n_leaf each); the split
-    # levels multiply the partial scalings so the total is exactly 1/n.
+    # Inverse scaling is folded into each pass's transform LUT (1/f each);
+    # the factors multiply so the total is exactly 1/n.
     return yr.reshape(*lead, n), yi.reshape(*lead, n)
 
 

@@ -1,0 +1,247 @@
+"""Strided-pencil Pallas kernels — the pass-program executors for the split
+regime (N > FUSED_MAX).
+
+The planner (``repro.core.plan.compile_passes``) linearizes a split-regime
+transform into passes over *pencil views* of the flat buffer.  The two pass
+shapes map onto two kernels, and all the glue the old recursion routed
+through HBM (``swapaxes`` re-tilings, the inter-factor twiddle ``cmul``, the
+natural-order transpose) happens inside their VMEM bodies:
+
+``cols_pass_call``
+    Transform along the **middle** axis of a ``(R, f, s)`` view — i.e. the
+    strided columns of the ``(b, n1, n2)`` signal view, read and written in
+    place through BlockSpecs that index ``(1, f, chunk)`` sub-blocks.  No
+    materialized HBM ``swapaxes``: the (f, chunk) tile is transposed in VMEM,
+    pushed through the shared tile engines (:func:`~repro.kernels.dft_matmul.
+    dft_tile` for f ≤ 1024, :func:`~repro.kernels.fft4step.four_step_tile`
+    beyond), transposed back, and multiplied by its chunk of the inter-factor
+    twiddle grid (a host-cached LUT served chunk-by-chunk through its own
+    BlockSpec — the paper's texture table, §2.3.1).
+
+``rows_natural_call``
+    Transform along the **last** axis of a ``(B, p, f)`` view and write each
+    (chunk, f) result tile *transposed* into the ``(B, f, p)`` output view —
+    the four-step natural-order transpose folded into the final pass's
+    strided write (output BlockSpec ``(1, f, chunk)`` at column ``chunk``),
+    costing zero standalone HBM transpose.
+
+``rfft_recomb_call`` / ``irfft_recomb_call``
+    The Hermitian even/odd recombination of the real-FFT packing as a single
+    epilogue pass (one HBM round trip) instead of the ~10-op traced XLA glue:
+    the whole half-spectrum row is VMEM-resident, so the Z[-k] reversal is an
+    in-register ``flip``+``roll``.
+
+Grid dimensions are ``parallel`` everywhere (no cross-step carries).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fft_xla import cmul, irfft_recomb, rfft_recomb
+from repro.kernels.dft_matmul import dft_tile
+from repro.kernels.fft4step import four_step_tile
+from repro.kernels.pallas_compat import compiler_params
+
+__all__ = [
+    "cols_pass_call",
+    "rows_natural_call",
+    "rfft_recomb_call",
+    "irfft_recomb_call",
+]
+
+
+def _tile_transform(xr, xi, luts, kind: str, n1: int, n2: int):
+    """Dispatch a (bt, f) VMEM tile to the shared direct/four-step engines."""
+    if kind == "direct":
+        wr, wi = luts
+        return dft_tile(xr, xi, wr, wi)
+    w1r, w1i, tr, ti, w2r, w2i = luts
+    return four_step_tile(xr, xi, w1r, w1i, tr, ti, w2r, w2i, n1, n2, True)
+
+
+def _lut_specs(kind: str, f: int, n1: int, n2: int, index_map):
+    if kind == "direct":
+        return [pl.BlockSpec((f, f), index_map)] * 2
+    return (
+        [pl.BlockSpec((n1, n1), index_map)] * 2
+        + [pl.BlockSpec((n1, n2), index_map)] * 2
+        + [pl.BlockSpec((n2, n2), index_map)] * 2
+    )
+
+
+def _as_ops(luts):
+    return [jnp.asarray(a) for a in luts]
+
+
+def _make_cols_kernel(kind: str, n1: int, n2: int, n_luts: int, has_tw: bool):
+    def kernel(x_r, x_i, *rest):
+        luts = [r[...] for r in rest[:n_luts]]
+        if has_tw:
+            t_r, t_i = rest[n_luts], rest[n_luts + 1]
+        o_r, o_i = rest[-2], rest[-1]
+        f, c = x_r.shape[1], x_r.shape[2]
+        # (1, f, c) block → (c, f): the chunk's c pencils become tile rows.
+        xr = x_r[...].reshape(f, c).swapaxes(0, 1)
+        xi = x_i[...].reshape(f, c).swapaxes(0, 1)
+        yr, yi = _tile_transform(xr, xi, luts, kind, n1, n2)
+        yr = yr.swapaxes(0, 1)  # back to (f, c): bin-major, pencil columns
+        yi = yi.swapaxes(0, 1)
+        if has_tw:
+            # Inter-factor twiddle epilogue: bin k of pencil p ⊙ T[k, p].
+            yr, yi = cmul(yr, yi, t_r[...], t_i[...])
+        o_r[...] = yr.reshape(1, f, c)
+        o_i[...] = yi.reshape(1, f, c)
+
+    return kernel
+
+
+def cols_pass_call(
+    xr: jax.Array,
+    xi: jax.Array,
+    luts,
+    twiddle=None,
+    *,
+    kind: str,
+    n1: int = 0,
+    n2: int = 0,
+    chunk: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Strided-column transform pass: x (R, f, s), FFT of length f down the
+    middle axis, written in place (same layout).  ``twiddle`` is the (f, s)
+    inter-factor grid (split planes) applied as the VMEM epilogue."""
+    r, f, s = xr.shape
+    assert s % chunk == 0, (s, chunk)
+    grid = (r, s // chunk)
+    sig = pl.BlockSpec((1, f, chunk), lambda i, j: (i, 0, j))
+    in_specs = [sig, sig] + _lut_specs(kind, f, n1, n2, lambda i, j: (0, 0))
+    operands = [xr, xi] + _as_ops(luts)
+    has_tw = twiddle is not None
+    if has_tw:
+        tw_spec = pl.BlockSpec((f, chunk), lambda i, j: (0, j))
+        in_specs += [tw_spec, tw_spec]
+        operands += _as_ops(twiddle)
+    out_shape = [
+        jax.ShapeDtypeStruct((r, f, s), jnp.float32),
+        jax.ShapeDtypeStruct((r, f, s), jnp.float32),
+    ]
+    fn = pl.pallas_call(
+        _make_cols_kernel(kind, n1, n2, len(luts), has_tw),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[sig, sig],
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel")
+        ),
+    )
+    return tuple(fn(*operands))
+
+
+def _make_rows_kernel(kind: str, n1: int, n2: int, n_luts: int):
+    def kernel(x_r, x_i, *rest):
+        luts = [r[...] for r in rest[:n_luts]]
+        o_r, o_i = rest[-2], rest[-1]
+        c, f = x_r.shape[1], x_r.shape[2]
+        xr = x_r[...].reshape(c, f)
+        xi = x_i[...].reshape(c, f)
+        yr, yi = _tile_transform(xr, xi, luts, kind, n1, n2)
+        # Natural-order transpose fused into the write: (c, f) → (f, c).
+        o_r[...] = yr.swapaxes(0, 1).reshape(1, f, c)
+        o_i[...] = yi.swapaxes(0, 1).reshape(1, f, c)
+
+    return kernel
+
+
+def rows_natural_call(
+    xr: jax.Array,
+    xi: jax.Array,
+    luts,
+    *,
+    kind: str,
+    n1: int = 0,
+    n2: int = 0,
+    chunk: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Contiguous-row transform pass with the natural-order transpose fused
+    into its strided write: x (B, p, f) → y (B, f, p), where
+    y[b, k, q] = FFT_f(x[b, q, :])[k]."""
+    b, p, f = xr.shape
+    assert p % chunk == 0, (p, chunk)
+    grid = (b, p // chunk)
+    in_sig = pl.BlockSpec((1, chunk, f), lambda i, j: (i, j, 0))
+    out_sig = pl.BlockSpec((1, f, chunk), lambda i, j: (i, 0, j))
+    in_specs = [in_sig, in_sig] + _lut_specs(kind, f, n1, n2, lambda i, j: (0, 0))
+    operands = [xr, xi] + _as_ops(luts)
+    out_shape = [
+        jax.ShapeDtypeStruct((b, f, p), jnp.float32),
+        jax.ShapeDtypeStruct((b, f, p), jnp.float32),
+    ]
+    fn = pl.pallas_call(
+        _make_rows_kernel(kind, n1, n2, len(luts)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[out_sig, out_sig],
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel")
+        ),
+    )
+    return tuple(fn(*operands))
+
+
+# ---------------------------------------------------------------------------
+# Hermitian recombination epilogue passes (rfft / irfft packing)
+# ---------------------------------------------------------------------------
+
+
+def _recomb_call(tile_fn, zr, zi, wr, wi, m_in, m_out, interpret):
+    b = zr.shape[0]
+    wr = jnp.asarray(wr, jnp.float32).reshape(1, -1)
+    wi = jnp.asarray(wi, jnp.float32).reshape(1, -1)
+    mw = wr.shape[-1]
+
+    def kernel(z_r, z_i, w_r, w_i, o_r, o_i):
+        yr, yi = tile_fn(z_r[...], z_i[...], w_r[...], w_i[...])
+        o_r[...] = yr
+        o_i[...] = yi
+
+    sig_in = pl.BlockSpec((1, m_in), lambda i: (i, 0))
+    sig_out = pl.BlockSpec((1, m_out), lambda i: (i, 0))
+    w_spec = pl.BlockSpec((1, mw), lambda i: (0, 0))
+    fn = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[sig_in, sig_in, w_spec, w_spec],
+        out_specs=[sig_out, sig_out],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m_out), jnp.float32),
+            jax.ShapeDtypeStruct((b, m_out), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=compiler_params(dimension_semantics=("parallel",)),
+    )
+    return tuple(fn(zr, zi, wr, wi))
+
+
+def rfft_recomb_call(zr, zi, wr, wi, *, interpret: bool = False):
+    """Forward recombination pass: packed spectrum (B, m) → bins (B, m+1).
+
+    One ``pallas_call`` executing :func:`repro.core.fft_xla.rfft_recomb` on
+    VMEM-resident spectrum rows — the Z[-k] reversal is an in-register
+    flip+roll, and the whole Hermitian epilogue costs one HBM round trip.
+    """
+    m = zr.shape[-1]
+    return _recomb_call(rfft_recomb, zr, zi, wr, wi, m, m + 1, interpret)
+
+
+def irfft_recomb_call(xr, xi, wr, wi, *, interpret: bool = False):
+    """Inverse recombination pass: bins (B, m+1) → packed spectrum (B, m)."""
+    m = xr.shape[-1] - 1
+    return _recomb_call(irfft_recomb, xr, xi, wr, wi, m + 1, m, interpret)

@@ -164,15 +164,19 @@ def _lower_decode(cfg, shape, mesh, par):
 
 
 def _fft_plan_info(fft_shape, model_n: int) -> dict:
-    """Plan metadata recorded alongside the lowering: the per-leaf schedule
-    facts (one plan per pencil factor) the pencil driver will execute."""
+    """Plan metadata recorded alongside the lowering: the per-leaf pass
+    programs (one plan per pencil factor) the pencil driver will execute,
+    with modeled HBM bytes per pass so the round-trip count is observable
+    in every artifact, not just asserted by tests."""
     from repro.core import distributed as dist
     from repro.core import plan as plan_lib
 
     if fft_shape.kind == "fft2d":
         leaf_ns = [fft_shape.n, fft_shape.n2]
+        total = fft_shape.n * fft_shape.n2
     else:
         leaf_ns = list(dist.pencil_factors(fft_shape.n, model_n))
+        total = fft_shape.n
     # Schedule facts only — backend negotiation on the dry-run host (CPU)
     # would misstate what the production TPU pencil driver picks.
     return {
@@ -181,6 +185,13 @@ def _fft_plan_info(fft_shape, model_n: int) -> dict:
         "hbm_round_trips": max(
             plan_lib.plan_fft(m).hbm_round_trips for m in leaf_ns
         ),
+        # A length-m leaf runs over batch × (total/m) pencils — charge the
+        # full global pencil count or the modeled bytes understate the real
+        # traffic by total/m (the figure bench_table1 reports would disagree).
+        "pass_programs": [
+            rl.fft_pass_report(m, batch=fft_shape.batch * (total // m))
+            for m in leaf_ns
+        ],
     }
 
 

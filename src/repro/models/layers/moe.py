@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers.mlp import _ACT, mlp_init, mlp_apply
-from repro.sharding.logical import ann, data_shard_count
+from repro.sharding.logical import ann
 from repro.utils.params import normal
 
 __all__ = ["moe_init", "moe_apply"]
@@ -48,31 +48,40 @@ def moe_init(key, cfg, dtype) -> dict:
 
 def _capacity(tokens: int, cfg) -> int:
     cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
-    return max(8, (cap + 7) // 8 * 8)  # sublane-aligned
+    cap = max(8, (cap + 7) // 8 * 8)  # sublane-aligned
+    # Never more slots than a row can assign: `pos < cap` cannot bind beyond
+    # tokens·k, so this clamp changes no routing decision — it only stops the
+    # aligned floor from blowing the decode-step (tokens=1) dispatch buffer
+    # and expert-GEMM rows up by 8/k per expert.
+    return min(cap, tokens * cfg.top_k)
 
 
 def moe_apply(params, x, *, cfg) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, D) → (y, aux_loss).
 
-    Group-local dispatch (§Perf hillclimb 3): tokens are viewed as
-    (G, T/G, ·) with G = the mesh's data-shard count, and *all* routing
-    bookkeeping (cumsum position assignment, capacity, scatter, gather) is
-    per-group — i.e. local to one data shard.  The only cross-shard traffic
-    is the (E, G·C_g, D) buffer re-sharding from group-sharded to
+    Group-local dispatch (§Perf hillclimb 3): all routing bookkeeping
+    (cumsum position assignment, capacity, scatter, gather) is per-group,
+    with one group per **batch row**.  Rows are contiguous on a data shard,
+    so the bookkeeping stays shard-local (the property that fixed the
+    995 GB/chip/step all-reduce on deepseek train_4k); the only cross-shard
+    traffic is the (E, G·C_g, D) buffer re-sharding from group-sharded to
     expert-sharded around the expert GEMMs (a true all-to-all of the token
-    payload).  The previous global-cumsum form made SPMD materialise a
-    full-size partial expert buffer per shard and all-reduce it — measured
-    995 GB/chip/step of all-reduce on deepseek train_4k.
+    payload).
+
+    Row-local groups also make routing *batch-invariant and prefix-causal*:
+    a token's capacity slot depends only on earlier tokens of its own
+    sequence, never on other requests in the batch or on padding beyond it —
+    the property the serving path's decode-equivalence tests assert (the
+    earlier flat (T/G)-token grouping let row 0's tail displace row 1's
+    tokens, so prefill logits changed with batch composition).
     """
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.top_k
     cd = x.dtype
     t = b * s
-    ng = data_shard_count()
-    if t % ng:
-        ng = 1  # tiny test batches: fall back to one group
-    tl = t // ng
-    cg = _capacity(tl, cfg)  # per-group expert capacity
+    ng = b  # one group per batch row: shard-local AND batch-invariant
+    tl = s
+    cg = _capacity(tl, cfg)  # per-row expert capacity
 
     xt = ann(x.reshape(ng, tl, d), "batch", None, "embed")
 

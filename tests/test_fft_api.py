@@ -8,7 +8,8 @@ import pytest
 from repro.core import fft as F
 
 BACKENDS = F.available_backends()
-ACCEPTANCE_SIZES = [256, 4096, 131072]
+# 262144 = 2¹⁸: the split regime's linearized pass program, on every backend.
+ACCEPTANCE_SIZES = [256, 4096, 131072, 262144]
 
 
 def _rand_c(rng, shape):

@@ -20,12 +20,16 @@ def test_fused_regime_one_call():
 
 
 def test_split_regimes_match_paper_structure():
-    # Above the fused limit each factor-split adds one HBM round trip,
-    # mirroring the paper's 2-call and 3-call regimes.
+    # Above the fused limit each program factor is one HBM round trip: the
+    # two-factor program covers every N ≤ 2³² in 2 calls (the paper's ≥ 3
+    # beyond 32K, beaten by fusing twiddle + transpose into the kernels).
     assert P.plan_fft(2**17).kernel_calls == 2
     assert P.plan_fft(2**24).kernel_calls == 2
     assert P.plan_fft(2**32).kernel_calls == 2  # 65536 x 65536
-    assert P.plan_fft(2**33).kernel_calls == 3
+    # Beyond two factors natural order needs the explicit digit-reversal
+    # relayout pass (3 transform passes + 1 reorder); pencil order skips it.
+    assert P.plan_fft(2**33).kernel_calls == 4
+    assert len(P.compile_passes(2**33, order="pencil")) == 3
 
 
 def test_balanced_split():
@@ -56,3 +60,70 @@ def test_vmem_budget_respected():
 def test_describe_smoke():
     s = P.describe(2**18)
     assert "2 HBM round trip" in s
+    assert "twiddle" in s  # pass program lines include the fused epilogue
+    assert "MB" in s  # ... and the modeled HBM traffic
+
+
+def test_pass_program_round_trip_counts():
+    # ISSUE-2 acceptance bounds: ≤ 3 / 3 / 4 passes for 2¹⁷ / 2¹⁸ / 2²⁰.
+    # The fused program does them all in 2 (twiddle + transpose in-kernel).
+    for n, bound in ((2**17, 3), (2**18, 3), (2**20, 4)):
+        plan = P.plan_fft(n)
+        assert len(plan.passes) == 2 <= bound
+        assert plan.hbm_round_trips == len(plan.passes)
+
+
+def test_pass_program_views_and_twiddle():
+    n = 2**18
+    f0, f1 = P.program_factors(n)
+    assert (f0, f1) == (512, 512)
+    col, row = P.plan_fft(n).passes
+    # column pass: strided pencils, in-place layout, fused twiddle epilogue
+    assert col.view_in == (n // f0, f1, f0)
+    assert col.view_out == col.view_in
+    assert col.twiddle_after == (f0, f1)
+    assert col.order == "pencil"
+    # row pass: contiguous pencils, natural-order transpose fused into the
+    # strided write (its out view is the column view of the output buffer)
+    assert row.view_in == (f0, 1, f1)
+    assert row.view_out == (f0, f0, f1)
+    assert row.twiddle_after is None
+    assert row.order == "natural"
+
+
+def test_pass_program_factor_consistency():
+    for n in (2**17, 2**18, 2**20, 2**24):
+        fs = P.program_factors(n)
+        assert all(f <= P.FUSED_MAX for f in fs)
+        prod = 1
+        for f in fs:
+            prod *= f
+        assert prod == n
+        # program transform passes and factors line up 1:1
+        ts = [p for p in P.plan_fft(n).passes if p.kind != "reorder"]
+        assert tuple(p.n for p in ts) == fs
+
+
+def test_pass_hbm_bytes_model():
+    n = 2**18
+    plan = P.plan_fft(n)
+    sig = n * 2 * 4  # split-complex f32, batch 1
+    for p in plan.passes:
+        assert P.pass_hbm_bytes(p, batch=1) >= 2 * sig  # read + write
+    # the twiddle LUT is charged once, to the pass that fuses it
+    col, row = plan.passes
+    assert P.pass_hbm_bytes(col, 1) - P.pass_hbm_bytes(row, 1) >= sig
+    assert P.program_hbm_bytes(plan.passes, 2) > P.program_hbm_bytes(plan.passes, 1)
+
+
+def test_pick_pass_chunk_fits_budget():
+    # The VMEM budget is binding (a chunk below one 128-lane tile beats a
+    # working set Mosaic cannot place at all) — incl. huge factors like 2²⁶'s
+    # 8192×8192 program, which interpret-mode CI would never surface.
+    for n in (2**17, 2**18, 2**20, 2**26):
+        for p in P.plan_fft(n).passes:
+            c = P.pick_pass_chunk(p)
+            assert c >= 1
+            axis = p.view_in[1] if p.view_in[1] > 1 else p.view_in[0]
+            assert axis % c == 0
+            assert P._pass_chunk_bytes(p, c) <= 8 * 1024 * 1024 or c == 1
