@@ -1,24 +1,39 @@
 """SAR-representative workload (paper §3 motivation): batched 2-D transforms.
 
 Range/azimuth FFTs over a radar scene — "the data scale of FFT operation is
-from a few thousands to tens of thousands" (paper).  Measures the full 2-D
-pipeline (rows+columns) for our four-step backend vs jnp.fft.fft2, plus the
-rfft real-packing path on real-valued raw returns (beyond-paper win: the
-paper only handles complex signals).
+from a few thousands to tens of thousands" (paper).  Every scene runs through
+the planned 2-D API: ``fft2`` is ONE joint rows+columns pass program (no
+transposes between the axes), ``rfft2`` is the real-packing variant for
+real-valued raw returns (beyond-paper: the paper only handles complex
+signals), and the range-compression matched filter is ``fft_conv2d`` — an
+rfft2/irfft2 plan pair.  Each row reports the plan's pass count and modeled
+HBM GB next to wall-clock vs the ``jnp.fft.fft2`` stand-in, and full runs
+append a ``BENCH_sar.json`` trajectory entry so later PRs can track the
+2-D-program speedup against this baseline.
+
+  PYTHONPATH=src python -m benchmarks.bench_sar [--smoke]
 """
 
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import roofline as rl
 from repro.core import fft as F
-from repro.core.conv import fft_conv
+from repro.core.conv import fft_conv2d
 
 SCENES = [(512, 2048), (1024, 4096), (2048, 8192)]
+SMOKE_SCENES = [(128, 512)]
+FILTER_LEN = 256
+
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "BENCH_sar.json")
 
 
 def _time(fn, *args, reps=3, warmup=1) -> float:
@@ -32,38 +47,92 @@ def _time(fn, *args, reps=3, warmup=1) -> float:
     return min(ts)
 
 
-def main(emit=print):
-    emit("sar.name,rows,cols,jnp_fft2_ms,ours_fft2_ms,ours_rfft_rows_ms")
-    for rows, cols in SCENES:
-        x = (np.random.randn(rows, cols) + 1j * np.random.randn(rows, cols)).astype(
+def run(scenes, reps=3):
+    rows = []
+    for n_az, n_rg in scenes:
+        x = (np.random.randn(n_az, n_rg) + 1j * np.random.randn(n_az, n_rg)).astype(
             np.complex64
         )
-        xr = np.random.randn(rows, cols).astype(np.float32)
-        xj = jnp.asarray(x)
-        xrj = jnp.asarray(xr)
-        p_fft2 = F.plan(
-            F.FFTSpec(n=cols, kind="fft2", n2=rows, batch_hint=rows), backend="xla"
-        )
-        p_rfft = F.plan(
-            F.FFTSpec(n=cols, kind="rfft", batch_hint=rows), backend="xla"
-        )
+        xreal = np.random.randn(n_az, n_rg).astype(np.float32)
+        xj, xrj = jnp.asarray(x), jnp.asarray(xreal)
+        # The joint 2-D program (timed on the xla backend: same arithmetic
+        # as the Pallas kernels, which are TPU-targeted — interpret-mode
+        # timing is meaningless, see EXPERIMENTS.md).
+        p_fft2 = F.plan(F.FFTSpec(n=n_rg, kind="fft2", n2=n_az), backend="xla")
+        p_rfft2 = F.plan(F.FFTSpec(n=n_rg, kind="rfft2", n2=n_az), backend="xla")
         f_ours = jax.jit(lambda v: p_fft2(v))
         f_jnp = jax.jit(jnp.fft.fft2)
-        f_rfft = jax.jit(lambda v: p_rfft(v))
-        t_o = _time(f_ours, xj)
-        t_j = _time(f_jnp, xj)
-        t_r = _time(f_rfft, xrj)
-        emit(f"sar,{rows},{cols},{t_j*1e3:.2f},{t_o*1e3:.2f},{t_r*1e3:.2f}")
+        f_r2 = jax.jit(lambda v: p_rfft2(v))
+        report = rl.fft_pass_report(n_rg, batch=1, n2=n_az)
+        rows.append(
+            {
+                "rows": n_az,
+                "cols": n_rg,
+                "jnp_fft2_us": _time(f_jnp, xj, reps=reps) * 1e6,
+                "ours_fft2_us": _time(f_ours, xj, reps=reps) * 1e6,
+                "ours_rfft2_us": _time(f_r2, xrj, reps=reps) * 1e6,
+                "passes": report["hbm_round_trips"],
+                "modeled_hbm_gb": report["modeled_hbm_bytes"] / 1e9,
+            }
+        )
+    return rows
 
-    # range-compression step: matched filter via fft_conv (the actual SAR op)
-    emit("sar_conv.name,rows,cols,filter_len,fftconv_ms")
-    for rows, cols in SCENES[:2]:
-        x = np.random.randn(rows, cols).astype(np.float32)
-        h = np.random.randn(1, 256).astype(np.float32)
-        fc = jax.jit(lambda a, b: fft_conv(a, b))
-        t = _time(fc, jnp.asarray(x), jnp.asarray(h))
-        emit(f"sar_conv,{rows},{cols},256,{t*1e3:.2f}")
+
+def run_conv(scenes, reps=3):
+    """Range-compression matched filter: fft_conv2d (rfft2/irfft2 pair)."""
+    rows = []
+    for n_az, n_rg in scenes:
+        x = np.random.randn(n_az, n_rg).astype(np.float32)
+        h = np.random.randn(1, FILTER_LEN).astype(np.float32)
+        fc = jax.jit(lambda a, b: fft_conv2d(a, b, backend="xla"))
+        t = _time(fc, jnp.asarray(x), jnp.asarray(h), reps=reps)
+        rows.append(
+            {"rows": n_az, "cols": n_rg, "filter": FILTER_LEN, "us": t * 1e6}
+        )
+    return rows
+
+
+def _append_trajectory(fft_rows, conv_rows) -> None:
+    """BENCH_sar.json: one entry per run, so later PRs can diff the 2-D
+    program numbers against this PR's baseline on the same host."""
+    entry = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "fft2": fft_rows,
+        "range_conv": conv_rows,
+    }
+    path = os.path.abspath(TRAJECTORY)
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+
+
+def main(emit=print, smoke: bool = False):
+    scenes = SMOKE_SCENES if smoke else SCENES
+    reps = 2 if smoke else 3
+    emit("sar.name,rows,cols,jnp_fft2_ms,ours_fft2_ms,ours_rfft2_ms,"
+         "plan_passes,modeled_hbm_gb")
+    fft_rows = run(scenes, reps=reps)
+    for r in fft_rows:
+        emit(
+            f"sar,{r['rows']},{r['cols']},{r['jnp_fft2_us']/1e3:.2f},"
+            f"{r['ours_fft2_us']/1e3:.2f},{r['ours_rfft2_us']/1e3:.2f},"
+            f"{r['passes']},{r['modeled_hbm_gb']:.4f}"
+        )
+    emit("sar_conv.name,rows,cols,filter_len,fftconv2d_ms")
+    conv_rows = run_conv(scenes if smoke else scenes[:2], reps=reps)
+    for r in conv_rows:
+        emit(f"sar_conv,{r['rows']},{r['cols']},{r['filter']},{r['us']/1e3:.2f}")
+    if not smoke:
+        _append_trajectory(fft_rows, conv_rows)
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

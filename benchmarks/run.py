@@ -21,7 +21,10 @@ SUITES = {
 }
 
 #: Suites with a fast-path smoke mode; the rest are import-checked only.
-SMOKE_SUITES = {"table1": lambda: bench_table1.main(smoke=True)}
+SMOKE_SUITES = {
+    "table1": lambda: bench_table1.main(smoke=True),
+    "sar": lambda: bench_sar.main(smoke=True),
+}
 
 
 def main() -> None:

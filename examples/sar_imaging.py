@@ -1,8 +1,18 @@
-"""SAR range–Doppler image formation with the repo FFT (paper §3 motivation).
+"""SAR image formation on the planned 2-D FFT API (paper §3 motivation).
 
-Simulates raw returns of point scatterers, then: range compression (matched
-filter via fft_conv) → azimuth FFT → image peak check.  Everything flows
-through repro.core's memory-optimized transforms.
+Two scenes, each running through single plan handles end to end:
+
+1. **Stripmap range–Doppler**: real raw returns are range-compressed with an
+   LFM matched filter via ``fft_conv2d`` — one cached rfft2/irfft2 plan pair
+   (the joint rows+columns program with the Hermitian epilogue) — then
+   azimuth-compressed with a planned ``axis=-2`` FFT, the in-place column
+   pass: no transposes anywhere in the pipeline.
+2. **Spotlight (dechirped) phase history**: after dechirp-on-receive the
+   image *is* the 2-D FFT of the phase history, so image formation is ONE
+   planned ``fft2`` handle — the paper's headline scenario as a single
+   compiled multi-axis pass program.
+
+Each scene prints its plan schedule: pass count and modeled HBM GB.
 
   PYTHONPATH=src python examples/sar_imaging.py
 """
@@ -10,54 +20,102 @@ through repro.core's memory-optimized transforms.
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import roofline as rl
 from repro.core import fft as F
-from repro.core.fft_xla import cmul
+from repro.core.conv import fft_conv2d, next_pow2
 
-# ---- simulate raw data ------------------------------------------------------
-n_az, n_rg = 256, 2048           # azimuth pulses x range samples
-chirp_len = 256
 rng = np.random.default_rng(0)
 
-t = np.arange(chirp_len, dtype=np.float32)
-chirp = np.exp(1j * 0.002 * t**2).astype(np.complex64)  # LFM pulse
 
-targets = [(64, 500), (128, 1200), (200, 300)]  # (azimuth, range) bins
-raw = np.zeros((n_az, n_rg), np.complex64)
-for az0, rg0 in targets:
-    az_phase = np.exp(1j * 0.01 * (np.arange(n_az) - az0) ** 2)
-    for a in range(n_az):
-        seg = slice(rg0, rg0 + chirp_len)
-        raw[a, seg] += az_phase[a] * chirp
-raw += (rng.standard_normal(raw.shape) + 1j * rng.standard_normal(raw.shape)).astype(
-    np.complex64
-) * 0.05
+def report_scene(name: str, n_az: int, n_rg: int, note: str = "") -> None:
+    rep = rl.fft_pass_report(n_rg, batch=1, n2=n_az)
+    print(
+        f"[{name}] {note or 'scene'} {n_az}x{n_rg}: "
+        f"{rep['hbm_round_trips']} passes, "
+        f"modeled HBM {rep['modeled_hbm_bytes'] / 1e9:.4f} GB"
+    )
 
-# ---- range compression: matched filter in the frequency domain -------------
-# Plan both transforms once (FFTW/cuFFT-style handles): one length-n_rg plan
-# over range samples, one length-n_az plan over the azimuth (non-last) axis.
-rg_plan = F.plan(F.FFTSpec(n=n_rg, kind="fft", batch_hint=n_az))
-rg_iplan = F.plan(F.FFTSpec(n=n_rg, kind="ifft", batch_hint=n_az))
-az_plan = F.plan(F.FFTSpec(n=n_az, kind="fft", axis=0))
 
-xr, xi = jnp.asarray(raw.real), jnp.asarray(raw.imag)
-# pad filter spectrum to range length by transforming the padded kernel
-hpad = np.zeros(n_rg, np.complex64)
-hpad[:chirp_len] = np.conj(chirp[::-1])
-Hr, Hi = rg_plan((jnp.asarray(hpad.real), jnp.asarray(hpad.imag)))
-Xr, Xi = rg_plan((xr, xi))
-Yr, Yi = cmul(Xr, Xi, Hr[None, :], Hi[None, :])
-rc_r, rc_i = rg_iplan((Yr, Yi))
+# ===========================================================================
+# Scene 1 — stripmap: matched-filter range compression + azimuth FFT
+# ===========================================================================
+n_az, n_rg = 256, 2048          # azimuth pulses x range samples
+chirp_len = 256
 
-# ---- azimuth compression: FFT across pulses + quadratic dechirp -------------
-az = np.exp(-1j * 0.01 * (np.arange(n_az) - n_az / 2) ** 2).astype(np.complex64)
-dr, di = cmul(rc_r, rc_i, jnp.asarray(az.real)[:, None], jnp.asarray(az.imag)[:, None])
-ir, ii = az_plan((dr, di))  # axis-aware: transforms axis 0, no swapaxes
-image = np.hypot(np.asarray(ir), np.asarray(ii))  # (az_freq, range)
+t = np.arange(chirp_len, dtype=np.float64)
+chirp = np.cos(0.002 * t**2).astype(np.float32)        # real LFM pulse
+matched = chirp[::-1].copy()                           # time-reversed filter
 
-# ---- verify: bright peaks near the injected targets' range bins -------------
-print("image:", image.shape, "dynamic range: %.1f dB"
-      % (20 * np.log10(image.max() / (np.median(image) + 1e-6))))
-for az0, rg0 in targets:
-    rg_peak = int(np.argmax(image.max(axis=0)[rg0 - 32 : rg0 + chirp_len + 32])) + rg0 - 32
-    print(f"target at range bin {rg0:5d}: peak found at {rg_peak:5d} "
-          f"({'OK' if abs(rg_peak - (rg0 + chirp_len - 1)) <= 8 else 'MISS'})")
+# Each target: a range-delayed chirp echo, cosine azimuth modulation.
+targets = [(0.10, 500), (0.25, 1200), (0.40, 300)]     # (azimuth freq, range)
+raw = np.zeros((n_az, n_rg), np.float32)
+for fa, rg0 in targets:
+    az_mod = np.cos(2 * np.pi * fa * np.arange(n_az)).astype(np.float32)
+    raw[:, rg0 : rg0 + chirp_len] += az_mod[:, None] * chirp[None, :]
+raw += rng.standard_normal(raw.shape).astype(np.float32) * 0.05
+
+# Range compression: per-row matched filter as a (1, Lh) 2-D convolution —
+# one rfft2/irfft2 plan pair, the joint program end to end.
+rc = fft_conv2d(jnp.asarray(raw), jnp.asarray(matched)[None, :], mode="same")
+
+# Azimuth compression: planned FFT down the pulse axis — the in-place
+# strided-column pass (axis=-2), no swapaxes glue.
+az_plan = F.plan(F.FFTSpec(n=n_az, kind="fft", axis=-2))
+ar, ai = az_plan.apply_planes(rc, jnp.zeros_like(rc))
+image1 = np.hypot(np.asarray(ar), np.asarray(ai))      # (az_freq, range)
+
+# Report the transforms that actually ran: fft_conv2d's rfft2/irfft2 pair
+# operates on the zero-padded linear-convolution image (each direction is
+# one joint rows+cols program), and azimuth compression adds one more pass.
+pad_az = next_pow2(n_az + 1 - 1)
+pad_rg = next_pow2(n_rg + chirp_len - 1)
+report_scene(
+    "stripmap", pad_az, pad_rg,
+    note="per transform of the matched-filter rfft2/irfft2 pair, padded",
+)
+print(f"[stripmap] + 1 azimuth pass (planned axis=-2 FFT, n={n_az})")
+print("stripmap image:", image1.shape, "dynamic range: %.1f dB"
+      % (20 * np.log10(image1.max() / (np.median(image1) + 1e-6))))
+for fa, rg0 in targets:
+    expect_rg = rg0 + chirp_len - 1                    # matched-filter peak
+    lo, hi = expect_rg - 64, expect_rg + 64
+    rg_peak = int(np.argmax(image1.max(axis=0)[lo:hi])) + lo
+    az_col = image1[:, rg_peak]
+    az_peak = int(np.argmax(az_col[1 : n_az // 2])) + 1  # skip DC, one side
+    expect_az = int(round(fa * n_az))
+    ok = abs(rg_peak - expect_rg) <= 8 and abs(az_peak - expect_az) <= 2
+    print(f"  target (fa={fa:.2f}, rg={rg0:4d}): peak at "
+          f"(az {az_peak:3d}/{expect_az:3d}, rg {rg_peak:4d}/{expect_rg:4d}) "
+          f"{'OK' if ok else 'MISS'}")
+
+# ===========================================================================
+# Scene 2 — spotlight: dechirped phase history → ONE planned fft2
+# ===========================================================================
+n_az2, n_rg2 = 512, 4096
+# After dechirp-on-receive each point target is a 2-D complex sinusoid whose
+# frequency encodes its (azimuth, range) position.
+targets2 = [(64, 700), (200, 2048), (400, 3500)]       # (az bin, rg bin)
+a = np.arange(n_az2)[:, None]
+r = np.arange(n_rg2)[None, :]
+ph = np.zeros((n_az2, n_rg2), np.complex64)
+for az0, rg0 in targets2:
+    ph += np.exp(2j * np.pi * (az0 * a / n_az2 + rg0 * r / n_rg2)).astype(
+        np.complex64
+    )
+ph += 0.05 * (
+    rng.standard_normal(ph.shape) + 1j * rng.standard_normal(ph.shape)
+).astype(np.complex64)
+
+# One plan handle: the unified rows+columns pass program.
+fft2_plan = F.plan(F.FFTSpec(n=n_rg2, kind="fft2", n2=n_az2))
+print("\nspotlight plan:", fft2_plan.describe())
+report_scene("spotlight", n_az2, n_rg2)
+image2 = np.abs(np.asarray(fft2_plan(jnp.asarray(ph)))) / (n_az2 * n_rg2)
+
+for az0, rg0 in targets2:
+    az_pk, rg_pk = np.unravel_index(
+        np.argmax(image2[az0 - 4 : az0 + 5, rg0 - 4 : rg0 + 5]), (9, 9)
+    )
+    ok = (az_pk, rg_pk) == (4, 4) and image2[az0, rg0] > 0.5
+    print(f"  target (az={az0:3d}, rg={rg0:4d}): "
+          f"|X|={image2[az0, rg0]:.2f} {'OK' if ok else 'MISS'}")

@@ -142,25 +142,31 @@ def model_flops(n_params_active: int, tokens: int) -> float:
     return 6.0 * n_params_active * tokens
 
 
-def fft_pass_report(n: int, batch: int = 1, hw: HW = V5E) -> dict:
-    """Modeled HBM traffic of a length-``n`` FFT's linearized pass program.
+def fft_pass_report(
+    n: int, batch: int = 1, hw: HW = V5E, n2: Optional[int] = None
+) -> dict:
+    """Modeled HBM traffic of an FFT's linearized pass program.
 
     One entry per pass (the plan's HBM round trips, literally), plus the
     total and its roofline memory term — so the paper's kernel-call count is
     not just asserted by tests but observable in every dry-run artifact and
-    benchmark row.
+    benchmark row.  With ``n2`` the report covers the joint multi-axis 2-D
+    program of an ``(..., n2, n)`` image: each pass entry carries its
+    transform ``axis`` and every pass is charged the whole image it streams.
     """
     from repro.core import plan as plan_lib  # local: analysis stays lazy
 
-    plan = plan_lib.plan_fft(n)
+    plan = plan_lib.plan_fft2(n, n2) if n2 is not None else plan_lib.plan_fft(n)
+    shape2d = (n2, n) if n2 is not None else None
     passes = []
     for i, p in enumerate(plan.passes):
-        nbytes = plan_lib.pass_hbm_bytes(p, batch)
+        nbytes = plan_lib.pass_hbm_bytes(p, batch, plan_lib.pass_other(p, plan))
         pencils, stride, f = p.view_in if p.view_in else (1, 1, p.n)
         passes.append(
             {
                 "pass": i,
                 "kind": p.kind,
+                "axis": p.axis,
                 "n": p.n,
                 "view": [pencils, stride, f],
                 "twiddle": list(p.twiddle_after) if p.twiddle_after else None,
@@ -168,8 +174,8 @@ def fft_pass_report(n: int, batch: int = 1, hw: HW = V5E) -> dict:
                 "hbm_bytes": nbytes,
             }
         )
-    total = plan_lib.program_hbm_bytes(plan.passes, batch)
-    return {
+    total = plan_lib.program_hbm_bytes(plan.passes, batch, shape2d)
+    report = {
         "n": n,
         "batch": batch,
         "hbm_round_trips": plan.hbm_round_trips,
@@ -177,6 +183,9 @@ def fft_pass_report(n: int, batch: int = 1, hw: HW = V5E) -> dict:
         "modeled_hbm_bytes": total,
         "memory_s": total / hw.hbm_bw,
     }
+    if n2 is not None:
+        report["n2"] = n2
+    return report
 
 
 def roofline_terms(

@@ -21,8 +21,10 @@ from repro.core.fft import (
     ifft,
     ifft2,
     irfft,
+    irfft2,
     register_backend,
     rfft,
+    rfft2,
     use_backend,
 )
 from repro.core.fft import fft as fft_fn
@@ -42,7 +44,9 @@ __all__ = [
     "ifft",
     "ifft2",
     "irfft",
+    "irfft2",
     "rfft",
+    "rfft2",
     "FFTSpec",
     "PlannedFFT",
     "plan_transform",

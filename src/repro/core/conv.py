@@ -25,7 +25,13 @@ import numpy as np
 from repro.core import fft as fft_lib
 from repro.core.fft_xla import cmul
 
-__all__ = ["fft_conv", "fft_conv_packed", "next_pow2", "toeplitz_conv_ref"]
+__all__ = [
+    "fft_conv",
+    "fft_conv2d",
+    "fft_conv_packed",
+    "next_pow2",
+    "toeplitz_conv_ref",
+]
 
 
 def next_pow2(n: int) -> int:
@@ -72,14 +78,66 @@ def fft_conv(
 
 
 def toeplitz_conv_ref(x: np.ndarray, h: np.ndarray) -> np.ndarray:
-    """O(L²) direct causal convolution oracle for tests."""
-    L = x.shape[-1]
-    full = np.apply_along_axis(
-        lambda row: np.convolve(row, h if h.ndim == 1 else h[0], mode="full"),
-        -1,
-        x,
-    )
-    return full[..., :L]
+    """O(L²) direct causal convolution oracle for tests.
+
+    ``h`` broadcasts against ``x`` with the same rule as :func:`fft_conv`:
+    a 1-D filter applies to every row, per-channel filters broadcast over
+    the leading axes — so multi-filter test cases exercise every filter,
+    not just ``h[0]``.
+    """
+    L, Lh = x.shape[-1], h.shape[-1]
+    hb = np.broadcast_to(h, x.shape[:-1] + (Lh,))
+    flat_x = x.reshape(-1, L)
+    flat_h = hb.reshape(-1, Lh)
+    rows = [
+        np.convolve(row, filt, mode="full")[:L]
+        for row, filt in zip(flat_x, flat_h)
+    ]
+    return np.stack(rows).reshape(x.shape)
+
+
+def fft_conv2d(
+    x: jax.Array,
+    h: jax.Array,
+    *,
+    mode: str = "same",
+    backend: str | None = None,
+) -> jax.Array:
+    """2-D linear convolution of real images — the SAR matched-filter path.
+
+    ``x``: (..., H, W) real image(s); ``h``: real filter broadcast against
+    ``x`` over leading axes (a (1, Wh) filter is a per-row matched filter —
+    SAR range compression; a full 2-D reference function is the spotlight
+    matched filter).  Both are zero-padded to powers of two covering the
+    full linear convolution and transformed through ONE cached rfft2/irfft2
+    plan pair, i.e. the joint rows+columns pass program with the Hermitian
+    epilogue — two real 2-D transforms and a pointwise spectrum multiply,
+    never a per-axis transpose sandwich.
+
+    ``mode='same'`` returns the leading (H, W) window (causal 2-D: output
+    pixel (i, j) only sees inputs at (≤ i, ≤ j)); ``mode='full'`` returns
+    the whole (H + Hh - 1, W + Wh - 1) linear convolution.
+    """
+    H, W = x.shape[-2:]
+    Hh, Wh = h.shape[-2:]
+    N2 = next_pow2(H + Hh - 1)
+    N = next_pow2(W + Wh - 1)
+    fwd = fft_lib.plan(fft_lib.FFTSpec(n=N, kind="rfft2", n2=N2), backend=backend)
+    inv = fft_lib.plan(fft_lib.FFTSpec(n=N, kind="irfft2", n2=N2), backend=backend)
+
+    def pad2(a, hgt, wid):
+        a = jnp.asarray(a, jnp.float32)
+        return jnp.pad(a, [(0, 0)] * (a.ndim - 2) + [(0, N2 - hgt), (0, N - wid)])
+
+    Xr, Xi = fwd(pad2(x, H, W))
+    Hr, Hi = fwd(pad2(h, Hh, Wh))
+    Yr, Yi = cmul(Xr, Xi, Hr, Hi)
+    y = inv((Yr, Yi))
+    if mode == "same":
+        return y[..., :H, :W]
+    if mode == "full":
+        return y[..., : H + Hh - 1, : W + Wh - 1]
+    raise ValueError(f"mode must be 'same' or 'full', got {mode!r}")
 
 
 def fft_conv_packed(
@@ -115,7 +173,6 @@ def fft_conv_packed(
     Hr, Hi = rfwd(hp)
     # full-length hermitian extension of the real filter's spectrum
     m = n // 2
-    idx = (n - jnp.arange(n)) % n
     Hr_f = jnp.concatenate([Hr, Hr[..., 1:m][..., ::-1]], axis=-1)
     Hi_f = jnp.concatenate([Hi, -Hi[..., 1:m][..., ::-1]], axis=-1)
     Yr, Yi = cmul(Zr, Zi, Hr_f, Hi_f)

@@ -222,26 +222,29 @@ def pfft2d(
     """Distributed 2-D FFT (SAR range/azimuth): rows local, columns pencil.
 
     xr/xi: local shard (..., n1 // D, n2) of a (n1, n2) image, rows sharded
-    over ``axis_name``.  Row transforms are local; the column pass does one
-    all-to-all transpose, local FFTs, and transposes back — 2 all-to-alls
+    over ``axis_name``.  Each shard consumes ONE joint 2-D plan
+    (``FFTSpec(kind='fft2')`` — the same compiled rows+columns program the
+    single-chip path runs) split around the collectives: the row passes run
+    on the row-sharded slab, then one all-to-all transpose, the in-place
+    column passes on the column slab, and the transpose back — 2 all-to-alls
     per direction (the 2-D analogue of the paper's two-exchange schedule).
     """
-    d = num_shards
-    p = n1 // d
-    q = n2 // d
+    del num_shards  # the joint plan is shard-count-agnostic (slab widths vary)
     lead = xr.shape[:-2]
     la = len(lead)
 
-    plan_rows = _leaf_plan(n2, inverse, backend)
-    plan_cols = _leaf_plan(n1, inverse, backend, axis=-2)
+    joint = fft_lib.plan(
+        fft_lib.FFTSpec(n=n2, kind="ifft2" if inverse else "fft2", n2=n1),
+        backend=backend,
+    )
 
-    # (1) row FFTs over n2 — local and contiguous.
-    xr, xi = plan_rows.apply_planes(xr, xi)
+    # (1) row passes of the joint program over n2 — local and contiguous.
+    xr, xi = joint.apply_rows(xr, xi)
     # (2) a2a transpose: (p, n2) → (n1, q) column slabs.
     xr = _a2a(xr, axis_name, la + 1, la)
     xi = _a2a(xi, axis_name, la + 1, la)
-    # (3) column FFTs over n1 — in-place column pass (axis -2).
-    xr, xi = plan_cols.apply_planes(xr, xi)
+    # (3) column passes over n1 — in place down axis -2 of the (n1, q) slab.
+    xr, xi = joint.apply_cols(xr, xi)
     # (4) a2a back to row slabs (p, n2).
     xr = _a2a(xr, axis_name, la, la + 1)
     xi = _a2a(xi, axis_name, la, la + 1)

@@ -29,10 +29,13 @@ manager.  Built-in entries:
               TPU, portable everywhere).  Preferred on CPU/GPU.
 ``stockham``  radix-2 butterfly reference (the paper's original formulation).
 
-Module functions ``fft/ifft/rfft/irfft/fft2/ifft2`` remain as thin
-plan-cached wrappers (each call re-uses the cached :class:`PlannedFFT`); the
-1-D kinds grow an ``axis=`` argument for transforms over a non-last axis,
-while the 2-D kinds always transform the last two axes.
+Module functions ``fft/ifft/rfft/irfft/fft2/ifft2/rfft2/irfft2`` remain as
+thin plan-cached wrappers (each call re-uses the cached :class:`PlannedFFT`);
+the 1-D kinds grow an ``axis=`` argument for transforms over a non-last axis,
+while the 2-D kinds always transform the last two axes.  ``fft2``/``ifft2``
+compile into ONE joint multi-axis pass program (rows, then in-place strided
+columns — zero transposes between the axes); ``rfft2``/``irfft2`` add the
+row-wise Hermitian recombination epilogue around it.
 
 All complex transforms accept either a complex array or a ``(real, imag)``
 tuple of float32 planes, and return whichever form was supplied.
@@ -77,10 +80,13 @@ __all__ = [
     "irfft",
     "fft2",
     "ifft2",
+    "rfft2",
+    "irfft2",
 ]
 
-KINDS = ("fft", "ifft", "rfft", "irfft", "fft2", "ifft2")
+KINDS = ("fft", "ifft", "rfft", "irfft", "fft2", "ifft2", "rfft2", "irfft2")
 _COMPLEX_KINDS = ("fft", "ifft")
+_2D_KINDS = ("fft2", "ifft2", "rfft2", "irfft2")
 
 
 def _is_pow2(n: int) -> bool:
@@ -97,9 +103,16 @@ class FFTSpec:
     """What to transform — the hashable key a :class:`PlannedFFT` is built for.
 
     n:          transform length along ``axis`` (power of two).  For
-                ``irfft`` this is the *output* signal length; for ``fft2``/
-                ``ifft2`` the last-axis length (``n2`` is the second-to-last).
-    kind:       'fft' | 'ifft' | 'rfft' | 'irfft' | 'fft2' | 'ifft2'.
+                ``irfft``/``irfft2`` this is the *output* signal length along
+                the last axis; for the 2-D kinds it is the last-axis (row)
+                length and ``n2`` the second-to-last (column) length.
+    kind:       'fft' | 'ifft' | 'rfft' | 'irfft' | 'fft2' | 'ifft2' |
+                'rfft2' | 'irfft2'.  The 2-D complex kinds compile into ONE
+                joint pass program (rows then in-place columns); ``rfft2``
+                transforms a real ``(..., n2, n)`` image into its
+                ``(..., n2, n//2 + 1)`` half-spectrum (numpy ``rfft2``
+                layout: real transform over the last axis, full complex
+                transform over axis -2) and ``irfft2`` inverts it.
     axis:       transform axis (2-D kinds always use the last two axes).
     precision:  compute precision of the planes ('float32' for now; the field
                 exists so mixed-precision plans slot in without an API break).
@@ -120,9 +133,9 @@ class FFTSpec:
             raise ValueError(f"unknown FFT kind {self.kind!r}; one of {KINDS}")
         if not _is_pow2(self.n):
             raise ValueError(f"FFT length must be a power of two, got {self.n}")
-        if self.kind in ("rfft", "irfft") and self.n < 2:
+        if self.kind in ("rfft", "irfft", "rfft2", "irfft2") and self.n < 2:
             raise ValueError(f"{self.kind} length must be >= 2, got {self.n}")
-        if self.kind in ("fft2", "ifft2"):
+        if self.kind in _2D_KINDS:
             if self.n2 is None or not _is_pow2(self.n2):
                 raise ValueError(
                     f"{self.kind} needs a power-of-two n2, got {self.n2}"
@@ -130,7 +143,7 @@ class FFTSpec:
             if self.axis != -1:
                 raise ValueError(f"{self.kind} always transforms the last two axes")
         elif self.n2 is not None:
-            raise ValueError(f"n2 is only meaningful for fft2/ifft2")
+            raise ValueError(f"n2 is only meaningful for the 2-D kinds {_2D_KINDS}")
         if self.batch_hint is not None and self.batch_hint < 1:
             raise ValueError(f"batch_hint must be >= 1, got {self.batch_hint}")
 
@@ -150,6 +163,11 @@ class BackendCapabilities:
     precisions:          plane precisions it implements.
     max_n:               largest supported transform length (None = unbounded).
     priority:            tie-break between equally-capable backends.
+    native_2d:           the backend fn executes a joint multi-axis plan
+                         (``fft_plan.n2`` set) in one call.  Backends without
+                         it still serve 2-D specs — the handle composes the
+                         cached row and ``axis=-2`` column 1-D plans of the
+                         same backend.
     """
 
     platforms: frozenset = frozenset({"cpu", "gpu", "tpu"})
@@ -157,6 +175,7 @@ class BackendCapabilities:
     precisions: frozenset = frozenset({"float32"})
     max_n: Optional[int] = None
     priority: int = 10
+    native_2d: bool = False
 
     def supports(self, spec: FFTSpec, platform: str) -> bool:
         if platform not in self.platforms:
@@ -408,12 +427,14 @@ class PlannedFFT:
     transform; instances are hashable and interned by :func:`plan` so
     ``plan(spec) is plan(spec)``.
 
-    Non-complex kinds (rfft/irfft/fft2/ifft2) hold child PlannedFFT handles
-    for their inner complex transforms, so backends only ever execute plain
-    fft/ifft schedules; rfft/irfft additionally carry an ``epilogue``
-    :class:`~repro.core.plan.Pass` — the Hermitian recombination executed as
-    one more program pass (a single Pallas kernel on the pallas backend)
-    rather than traced XLA glue.
+    The complex kinds — including fft2/ifft2, whose rows+columns compile
+    into ONE joint :class:`~repro.core.plan.FFTPlan` program — execute
+    directly through the backend.  The real-packing kinds (rfft/irfft/
+    rfft2/irfft2) hold child PlannedFFT handles for their inner complex
+    transforms plus an ``epilogue`` :class:`~repro.core.plan.Pass` — the
+    Hermitian recombination executed as one more program pass (a single
+    Pallas kernel on the pallas backend) rather than traced XLA glue; the
+    2-D real kinds apply it row-wise between the row and column programs.
     """
 
     def __init__(
@@ -460,27 +481,39 @@ class PlannedFFT:
 
     @property
     def hbm_round_trips(self) -> int:
-        plans = [self.fft_plan] if self.fft_plan else [c.fft_plan for c in self.children]
-        trips = max(p.hbm_round_trips for p in plans)
+        if self.fft_plan is not None:
+            return self.fft_plan.hbm_round_trips
+        trips = sum(c.hbm_round_trips for c in self.children)
         return trips + (1 if self.epilogue is not None else 0)
 
     @property
     def passes(self) -> tuple:
-        """The linearized pass program this handle executes (child passes for
-        composite kinds, plus the recombination epilogue for rfft/irfft)."""
+        """The linearized pass program this handle executes, in execution
+        order (child passes for the real-packing kinds, with the Hermitian
+        recombination epilogue slotted where it actually runs)."""
         if self.fft_plan is not None:
             return self.fft_plan.passes
-        ps = tuple(p for c in self.children for p in c.fft_plan.passes)
-        if self.epilogue is not None:
-            ps = ps + (self.epilogue,)
-        return ps
+        ep = (self.epilogue,) if self.epilogue is not None else ()
+        kind = self.spec.kind
+        if kind == "irfft":
+            return ep + self.children[0].passes
+        if kind == "rfft2":
+            inner, cols = self.children
+            return inner.passes + ep + cols.passes
+        if kind == "irfft2":
+            inner, cols = self.children
+            return cols.passes + ep + inner.passes
+        return tuple(p for c in self.children for p in c.passes) + ep
 
     def describe(self) -> str:
-        n_main = self.fft_plan.n if self.fft_plan else self.children[0].fft_plan.n
-        s = (
-            f"{self.spec.kind} N={self.spec.n} backend={self.backend.name}: "
-            + plan_lib.describe(n_main)
-        )
+        spec = self.spec
+        size = f"N={spec.n2}x{spec.n}" if spec.n2 is not None else f"N={spec.n}"
+        head = f"{spec.kind} {size} backend={self.backend.name}: "
+        if self.fft_plan is not None:
+            return head + plan_lib.describe_program(self.fft_plan)
+        parts = [plan_lib.describe_program(c.fft_plan) for c in self.children
+                 if c.fft_plan is not None]
+        s = head + " | ".join(parts)
         if self.epilogue is not None:
             s += f"; epilogue pass: {self.epilogue.kind} n={self.epilogue.n}"
         return s
@@ -517,6 +550,8 @@ class PlannedFFT:
         axis-capable backends — no materialized transpose.
         """
         kind = self.spec.kind
+        if kind in ("fft2", "ifft2"):
+            return self._fft2_planes(xr, xi)
         ax = self.spec.axis
         if ax < 0:
             ax += xr.ndim
@@ -527,8 +562,6 @@ class PlannedFFT:
             xr, xi = self._to_last(xr), self._to_last(xi)
         if kind in _COMPLEX_KINDS:
             yr, yi = self._complex(xr, xi, inverse=kind == "ifft")
-        elif kind in ("fft2", "ifft2"):
-            yr, yi = self._fft2_planes(xr, xi)
         else:
             raise ValueError(f"apply_planes on {kind!r} plan; use __call__")
         if move:
@@ -543,19 +576,151 @@ class PlannedFFT:
             return _join(yr, yi, was_c)
         if kind == "rfft":
             return self._rfft(x)
-        return self._irfft(x)
+        if kind == "irfft":
+            return self._irfft(x)
+        if kind == "rfft2":
+            return self._rfft2(x)
+        return self._irfft2(x)
+
+    # -- 2-D execution: ONE joint program, no transposes between the axes ---
+
+    def _check_image(self, xr):
+        n, n2 = self.spec.n, self.spec.n2
+        if xr.ndim < 2 or xr.shape[-2:] != (n2, n):
+            raise ValueError(
+                f"{self.spec.kind} planned for (..., {n2}, {n}) images, "
+                f"got shape {tuple(xr.shape)}"
+            )
+
+    def _axis_child(self, axis: int, inverse: bool) -> "PlannedFFT":
+        """Cached 1-D plan of the same backend over one image axis — the
+        composition path for backends without native multi-axis programs."""
+        n = self.spec.n if axis == -1 else self.spec.n2
+        return plan(
+            FFTSpec(
+                n=n,
+                kind="ifft" if inverse else "fft",
+                axis=axis,
+                precision=self.spec.precision,
+            ),
+            backend=self.backend.name,
+        )
 
     def _fft2_planes(self, xr, xi) -> Planes:
-        rows, cols = self.children
-        xr, xi = rows._complex(xr, xi, inverse=self.spec.kind == "ifft2")
-        xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)
-        xr, xi = cols._complex(xr, xi, inverse=self.spec.kind == "ifft2")
-        return jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)
+        self._check_image(xr)
+        inverse = self.spec.kind == "ifft2"
+        if self.fft_plan is not None and self.backend.capabilities.native_2d:
+            # The joint program in one backend call: row passes over the
+            # last axis, then the in-place strided-column pass — zero
+            # materialized transposes (jaxpr-asserted in the tests).
+            return self._complex(xr, xi, inverse=inverse)
+        xr, xi = self._row_col_plans()[0].apply_planes(xr, xi)
+        return self._row_col_plans()[1].apply_planes(xr, xi)
+
+    def _row_col_plans(self) -> tuple:
+        """The per-axis 1-D plans of the composition path: the pre-built
+        children for beyond-fused column lengths, lazily cached axis plans
+        otherwise (backends without native multi-axis programs)."""
+        if self.children:
+            return self.children
+        inverse = self.spec.kind == "ifft2"
+        return self._axis_child(-1, inverse), self._axis_child(-2, inverse)
+
+    def apply_rows(self, xr: jax.Array, xi: jax.Array) -> Planes:
+        """Run only the row (last-axis) sub-program of a 2-D plan.
+
+        The distributed pencil driver consumes the joint program in two
+        halves around its all-to-all transposes: row passes on the
+        row-sharded slab, column passes on the column slab."""
+        if self.spec.kind not in ("fft2", "ifft2"):
+            raise ValueError(f"apply_rows needs a 2-D complex plan, not {self.spec.kind!r}")
+        inverse = self.spec.kind == "ifft2"
+        if self.fft_plan is None or not self.backend.capabilities.native_2d:
+            return self._row_col_plans()[0].apply_planes(xr, xi)
+        from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
+
+        row_passes = tuple(p for p in self.fft_plan.passes if p.axis == -1)
+        lead, n = xr.shape[:-1], xr.shape[-1]
+        b = int(np.prod(lead)) if lead else 1
+        yr, yi = kernel_ops.execute_program(
+            xr.reshape(b, n),
+            xi.reshape(b, n),
+            row_passes,
+            inverse=inverse,
+            batch_tiles=self._batch_tiles,
+        )
+        return yr.reshape(*lead, n), yi.reshape(*lead, n)
+
+    def apply_cols(self, xr: jax.Array, xi: jax.Array) -> Planes:
+        """Run only the column (axis -2) sub-program of a 2-D plan, in place
+        over whatever width the slab carries (see :meth:`apply_rows`)."""
+        if self.spec.kind not in ("fft2", "ifft2"):
+            raise ValueError(f"apply_cols needs a 2-D complex plan, not {self.spec.kind!r}")
+        inverse = self.spec.kind == "ifft2"
+        if self.fft_plan is None or not self.backend.capabilities.native_2d:
+            return self._row_col_plans()[1].apply_planes(xr, xi)
+        from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
+
+        col_passes = tuple(p for p in self.fft_plan.passes if p.axis == -2)
+        if not col_passes:
+            return xr, xi
+        lead, (rows, w) = xr.shape[:-2], xr.shape[-2:]
+        if rows != self.spec.n2:
+            raise ValueError(f"plan is for n2={self.spec.n2} columns, got {rows}")
+        b = int(np.prod(lead)) if lead else 1
+        yr, yi = kernel_ops.execute_program2d(
+            xr.reshape(b, rows, w),
+            xi.reshape(b, rows, w),
+            col_passes,
+            inverse=inverse,
+            batch_tiles=self._batch_tiles,
+        )
+        return yr.reshape(*lead, rows, w), yi.reshape(*lead, rows, w)
 
     def _recomb_kernel(self) -> bool:
         """Whether the Hermitian recombination runs as a Pallas epilogue pass
         (pallas backend) instead of traced XLA glue."""
         return self.backend.name == "pallas" and self.epilogue is not None
+
+    def _recomb_fwd(self, Zr, Zi) -> Planes:
+        """Forward Hermitian recombination over the last axis: the packed
+        (..., m) spectrum → (..., m+1) real-FFT bins.  One Pallas epilogue
+        pass on the pallas backend (row-wise over any leading dims — the 2-D
+        kinds reuse it across the image's rows), traced jnp elsewhere."""
+        wr_np, wi_np = self.luts[0]
+        m = Zr.shape[-1]
+        if self._recomb_kernel():
+            from repro.kernels import ops as kernel_ops
+            from repro.kernels import pencil as pencil_kernels
+
+            lead = Zr.shape[:-1]
+            b = int(np.prod(lead)) if lead else 1
+            Xr, Xi = pencil_kernels.rfft_recomb_call(
+                Zr.reshape(b, m), Zi.reshape(b, m), wr_np, wi_np,
+                interpret=kernel_ops.should_interpret(),
+            )
+            return Xr.reshape(*lead, m + 1), Xi.reshape(*lead, m + 1)
+        wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
+        return fft_xla.rfft_recomb(Zr, Zi, wr, wi)
+
+    def _recomb_inv(self, Xr, Xi) -> Planes:
+        """Inverse recombination over the last axis: (..., m+1) bins → the
+        packed (..., m) spectrum (mirror of :meth:`_recomb_fwd`)."""
+        wr_np, wi_np = self.luts[0]  # e^{+2πik/n}
+        m = Xr.shape[-1] - 1
+        if self._recomb_kernel():
+            from repro.kernels import ops as kernel_ops
+            from repro.kernels import pencil as pencil_kernels
+
+            lead = Xr.shape[:-1]
+            b = int(np.prod(lead)) if lead else 1
+            Zr, Zi = pencil_kernels.irfft_recomb_call(
+                Xr.reshape(b, m + 1), Xi.reshape(b, m + 1), wr_np, wi_np,
+                interpret=kernel_ops.should_interpret(),
+            )
+            return Zr.reshape(*lead, m), Zi.reshape(*lead, m)
+        wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
+        return fft_xla.irfft_recomb(Xr, Xi, wr, wi)
 
     def _rfft(self, x: jax.Array) -> Planes:
         """Real FFT via even/odd complex packing — N/2-point complex transform.
@@ -580,23 +745,7 @@ class PlannedFFT:
         zr = x[..., 0::2]  # even samples  -> real plane
         zi = x[..., 1::2]  # odd samples   -> imag plane
         Zr, Zi = inner._complex(zr, zi, inverse=False)
-        wr_np, wi_np = self.luts[0]
-        m = n // 2
-        if self._recomb_kernel():
-            from repro.kernels import ops as kernel_ops
-            from repro.kernels import pencil as pencil_kernels
-
-            lead = Zr.shape[:-1]
-            b = int(np.prod(lead)) if lead else 1
-            Xr, Xi = pencil_kernels.rfft_recomb_call(
-                Zr.reshape(b, m), Zi.reshape(b, m), wr_np, wi_np,
-                interpret=kernel_ops.should_interpret(),
-            )
-            Xr = Xr.reshape(*lead, m + 1)
-            Xi = Xi.reshape(*lead, m + 1)
-        else:
-            wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
-            Xr, Xi = fft_xla.rfft_recomb(Zr, Zi, wr, wi)
+        Xr, Xi = self._recomb_fwd(Zr, Zi)
         if move:
             Xr, Xi = self._from_last(Xr), self._from_last(Xi)
         return Xr, Xi
@@ -616,27 +765,44 @@ class PlannedFFT:
         if Xr.shape[-1] != m + 1:
             raise ValueError(f"irfft expects n//2+1={m + 1} bins, got {Xr.shape[-1]}")
         (inner,) = self.children
-        wr_np, wi_np = self.luts[0]  # e^{+2πik/n}
-        if self._recomb_kernel():
-            from repro.kernels import ops as kernel_ops
-            from repro.kernels import pencil as pencil_kernels
-
-            lead = Xr.shape[:-1]
-            b = int(np.prod(lead)) if lead else 1
-            Zr, Zi = pencil_kernels.irfft_recomb_call(
-                Xr.reshape(b, m + 1), Xi.reshape(b, m + 1), wr_np, wi_np,
-                interpret=kernel_ops.should_interpret(),
-            )
-            Zr = Zr.reshape(*lead, m)
-            Zi = Zi.reshape(*lead, m)
-        else:
-            wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
-            Zr, Zi = fft_xla.irfft_recomb(Xr, Xi, wr, wi)
+        Zr, Zi = self._recomb_inv(Xr, Xi)
         zr, zi = inner._complex(Zr, Zi, inverse=True)
         out = jnp.stack([zr, zi], axis=-1).reshape(*zr.shape[:-1], n)
         if move:
             out = self._from_last(out)
         return out
+
+    def _rfft2(self, x: jax.Array) -> Planes:
+        """Real 2-D FFT: row rfft (packed complex rows + row-wise Hermitian
+        recombination epilogue) followed by the full complex column pass over
+        the (..., n2, n//2+1) half-spectrum — numpy ``rfft2`` layout.  On the
+        pallas backend every stage is a kernel pass: the packed row program,
+        the recombination epilogue, and the in-place strided-column pass."""
+        n = self.spec.n
+        x = jnp.asarray(x, jnp.float32)
+        self._check_image(x)
+        inner, cols = self.children
+        zr = x[..., 0::2]  # even samples  -> real plane
+        zi = x[..., 1::2]  # odd samples   -> imag plane
+        Zr, Zi = inner._complex(zr, zi, inverse=False)
+        Xr, Xi = self._recomb_fwd(Zr, Zi)  # (..., n2, n//2 + 1)
+        return cols._complex(Xr, Xi, inverse=False, axis=-2)
+
+    def _irfft2(self, x: Planes) -> jax.Array:
+        """Inverse of :meth:`_rfft2`: column ifft over the half-spectrum,
+        inverse recombination row-wise, packed row ifft, sample interleave."""
+        n, n2 = self.spec.n, self.spec.n2
+        Xr, Xi = x
+        m = n // 2
+        if Xr.ndim < 2 or Xr.shape[-2:] != (n2, m + 1):
+            raise ValueError(
+                f"irfft2 expects (..., {n2}, {m + 1}) bins, got {tuple(Xr.shape)}"
+            )
+        inner, cols = self.children
+        Xr, Xi = cols._complex(Xr, Xi, inverse=True, axis=-2)
+        Zr, Zi = self._recomb_inv(Xr, Xi)
+        zr, zi = inner._complex(Zr, Zi, inverse=True)
+        return jnp.stack([zr, zi], axis=-1).reshape(*zr.shape[:-1], n)
 
 
 # ---------------------------------------------------------------------------
@@ -680,11 +846,25 @@ def _plan_cached(spec: FFTSpec, backend_name: Optional[str], platform: str) -> P
             batch_tiles=_pick_tiles(fft_plan, spec.batch_hint),
         )
 
-    def child(n: int, inverse: bool, batch_hint: Optional[int]) -> PlannedFFT:
+    if kind in ("fft2", "ifft2") and spec.n2 <= plan_lib.FUSED_MAX:
+        # ONE joint multi-axis program: row passes over the last axis, then
+        # the in-place strided-column pass over n2 — no per-axis child plans
+        # and no transposes between the axes (compile_passes2d).
+        fft_plan = plan_lib.plan_fft2(spec.n, spec.n2)
+        return PlannedFFT(
+            spec,
+            entry,
+            fft_plan,
+            luts=_materialize_luts(fft_plan, kind == "ifft2", entry.name),
+            batch_tiles=_pick_tiles(fft_plan, None),
+        )
+
+    def child(n: int, inverse: bool, batch_hint: Optional[int], axis: int = -1) -> PlannedFFT:
         return _plan_cached(
             FFTSpec(
                 n=n,
                 kind="ifft" if inverse else "fft",
+                axis=axis,
                 precision=spec.precision,
                 batch_hint=batch_hint,
             ),
@@ -692,31 +872,41 @@ def _plan_cached(spec: FFTSpec, backend_name: Optional[str], platform: str) -> P
             platform,
         )
 
+    if kind in ("fft2", "ifft2"):
+        # Column length beyond the fused regime: no joint program yet
+        # (compile_passes2d would need strided multi-factor column passes),
+        # so the handle composes the row plan and the axis=-2 column plan —
+        # the pre-joint-program behavior, kept working for tall images and
+        # the distributed pencil driver's large-n1 shards.
+        inverse2 = kind == "ifft2"
+        rows = child(spec.n, inverse2, None)
+        cols = child(spec.n2, inverse2, None, axis=-2)
+        return PlannedFFT(spec, entry, None, children=(rows, cols))
+
+    inverse = kind in ("irfft", "irfft2")
+    m = spec.n // 2
+    bins = (1, 1, m + 1)
+    epilogue = plan_lib.Pass(
+        kind="irfft_recomb" if inverse else "rfft_recomb",
+        n=spec.n,
+        view_in=bins if inverse else (1, 1, m),
+        view_out=(1, 1, m) if inverse else bins,
+        order="natural",
+    )
+    luts = (tw.rfft_recomb_twiddle(spec.n, inverse=inverse),)
+    # The packed complex row transform sees the caller's batch unchanged.
+    inner = child(m, inverse, spec.batch_hint if kind in ("rfft", "irfft") else None)
     if kind in ("rfft", "irfft"):
-        # The packed complex transform sees the caller's batch unchanged.
-        inner = child(spec.n // 2, kind == "irfft", spec.batch_hint)
-        luts = (tw.rfft_recomb_twiddle(spec.n, inverse=kind == "irfft"),)
-        m = spec.n // 2
-        bins = (1, 1, m + 1)
-        epilogue = plan_lib.Pass(
-            kind=f"{kind}_recomb",
-            n=spec.n,
-            view_in=(1, 1, m) if kind == "rfft" else bins,
-            view_out=bins if kind == "rfft" else (1, 1, m),
-            order="natural",
-        )
         return PlannedFFT(
             spec, entry, None, children=(inner,), luts=luts, epilogue=epilogue
         )
-
-    # fft2 / ifft2: row pass over the last axis (n), column pass over n2.
-    # No batch_hint for the children: each pass's kernel batch is the
-    # caller's batch × the other image dimension, so capping by the caller
-    # batch alone would collapse the tile and explode the kernel grid.
-    inverse = kind == "ifft2"
-    rows = child(spec.n, inverse, None)
-    cols = child(spec.n2, inverse, None)
-    return PlannedFFT(spec, entry, None, children=(rows, cols))
+    # rfft2 / irfft2: packed rows + recomb epilogue + axis=-2 column pass
+    # over the half-spectrum (the column plan executes in place at whatever
+    # width the slab carries, so the non-power-of-two m+1 bins are fine).
+    cols = child(spec.n2, inverse, None, axis=-2)
+    return PlannedFFT(
+        spec, entry, None, children=(inner, cols), luts=luts, epilogue=epilogue
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -786,6 +976,7 @@ register_backend(
     BackendCapabilities(
         platforms=frozenset({"cpu", "tpu"}),  # cpu = interpret mode
         preferred_platforms=frozenset({"tpu"}),
+        native_2d=True,  # executes joint rows+cols programs in one call
     ),
 )
 
@@ -828,3 +1019,16 @@ def ifft2(x: ArrayOrPlanes, *, backend: Optional[str] = None) -> ArrayOrPlanes:
     shape = _input_shape(x)
     spec = FFTSpec(n=int(shape[-1]), kind="ifft2", n2=int(shape[-2]))
     return plan(spec, backend=backend)(x)
+
+
+def rfft2(x: jax.Array, *, backend: Optional[str] = None) -> Planes:
+    """Real 2-D FFT of an (..., n2, n) image: (..., n2, n//2 + 1) bins
+    (numpy ``rfft2`` layout), via a cached rfft2 plan."""
+    shape = jnp.shape(x)
+    spec = FFTSpec(n=int(shape[-1]), kind="rfft2", n2=int(shape[-2]))
+    return plan(spec, backend=backend)(x)
+
+
+def irfft2(x: Planes, n: int, n2: int, *, backend: Optional[str] = None) -> jax.Array:
+    """Inverse of :func:`rfft2`; output is the real (..., n2, n) image."""
+    return plan(FFTSpec(n=n, kind="irfft2", n2=n2), backend=backend)(x)

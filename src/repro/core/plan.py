@@ -50,13 +50,18 @@ __all__ = [
     "FFTPlan",
     "Pass",
     "plan_fft",
+    "plan_fft2",
     "compile_passes",
+    "compile_passes2d",
     "program_factors",
     "balanced_split",
     "vmem_bytes",
     "pass_hbm_bytes",
+    "pass_other",
     "program_hbm_bytes",
     "pick_pass_chunk",
+    "describe",
+    "describe_program",
 ]
 
 #: Largest N executed as a single direct DFT matmul (one (B,N)x(N,N) GEMM).
@@ -110,6 +115,11 @@ class Pass:
           as a VMEM epilogue (None for the last pass).  The grid is a
           host-cached LUT served chunk-by-chunk through a BlockSpec.
     order: buffer ordering this pass leaves behind: 'natural' | 'pencil'.
+    axis:  transform axis of a multi-axis (2-D image) program: ``-1`` for
+          row passes over the contiguous last axis, ``-2`` for in-place
+          strided-column passes down the image's second-to-last axis (views
+          are relative to that axis's length; the image width rides along as
+          extra pencil columns of the strided kernel).
     """
 
     kind: str
@@ -120,6 +130,7 @@ class Pass:
     view_out: tuple = ()
     twiddle_after: tuple | None = None
     order: str = "pencil"
+    axis: int = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,12 +142,17 @@ class FFTPlan:
     ``leaf_passes`` remain as the recursion-shaped metadata the pure-XLA
     backend and the LUT warm-up still consume.  ``hbm_round_trips`` is the
     figure the paper tabulates as "number of kernel calls".
+
+    ``n2`` marks a multi-axis program: the plan transforms an
+    ``(..., n2, n)`` image and ``passes`` mixes ``axis=-1`` row passes with
+    ``axis=-2`` column passes (see :func:`compile_passes2d`).
     """
 
     n: int
     levels: tuple[tuple[int, int], ...]  # ((n_outer, n_inner), ...) recursion
     leaf_passes: tuple[Pass, ...]        # one leaf pass per distinct length
     passes: tuple[Pass, ...] = ()        # linearized natural-order program
+    n2: int | None = None                # second-to-last-axis length (2-D)
 
     @property
     def hbm_round_trips(self) -> int:
@@ -252,6 +268,50 @@ def compile_passes(
     return tuple(passes)
 
 
+@functools.lru_cache(maxsize=256)
+def compile_passes2d(
+    n: int, n2: int, fused_max: int = FUSED_MAX
+) -> tuple[Pass, ...]:
+    """Compile the joint pass program of an ``(..., n2, n)`` 2-D transform.
+
+    Row passes first — the 1-D program of the last axis, executed over
+    ``batch × n2`` contiguous rows — then one in-place strided-column pass
+    down axis -2: the whole image is the pencil view ``(b, n2, n)`` and the
+    column kernel transforms its middle axis, so the row→column handoff
+    never materialises an HBM transpose (the §2.3.2 discipline extended to
+    the paper's image workload).  Column lengths beyond the fused regime
+    would need strided multi-factor column passes with width-broadcast
+    twiddles — out of scope until a workload needs >65536-row images.
+    """
+    if not _is_pow2(n2):
+        raise ValueError(f"FFT length must be a power of two, got {n2}")
+    if n2 > fused_max:
+        raise NotImplementedError(
+            f"joint 2-D programs need the column length in the fused regime "
+            f"(n2={n2} > {fused_max}): beyond it the columns would need "
+            f"strided multi-factor passes with width-broadcast twiddles.  "
+            f"fft.plan(FFTSpec(kind='fft2')) composes per-axis plans instead "
+            f"for such images; orienting the long axis last keeps the joint "
+            f"program."
+        )
+    passes = list(compile_passes(n, fused_max, "natural"))
+    if n2 > 1:
+        leaf = _leaf_pass(n2)
+        passes.append(
+            Pass(
+                kind=leaf.kind,
+                n=n2,
+                n1=leaf.n1,
+                n2=leaf.n2,
+                view_in=(1, 1, n2),
+                view_out=(1, 1, n2),
+                order="natural",
+                axis=-2,
+            )
+        )
+    return tuple(passes)
+
+
 @functools.lru_cache(maxsize=512)
 def plan_fft(n: int, fused_max: int = FUSED_MAX) -> FFTPlan:
     """Plan a length-``n`` power-of-two complex FFT."""
@@ -284,6 +344,29 @@ def plan_fft(n: int, fused_max: int = FUSED_MAX) -> FFTPlan:
     )
 
 
+@functools.lru_cache(maxsize=256)
+def plan_fft2(n: int, n2: int, fused_max: int = FUSED_MAX) -> FFTPlan:
+    """Plan an ``(..., n2, n)`` 2-D complex FFT as ONE linearized program.
+
+    ``n`` is the last-axis (row) length, ``n2`` the second-to-last (column)
+    length.  The returned plan's ``passes`` mix ``axis=-1`` row passes with
+    the in-place ``axis=-2`` column pass — a single compiled schedule, no
+    per-axis child plans and no transposes between the axes.
+    """
+    row_plan = plan_fft(n, fused_max)
+    leaf_lengths = {p.n for p in row_plan.leaf_passes}
+    if n2 > 1:
+        leaf_lengths.add(n2)
+    leaves = tuple(sorted((_leaf_pass(m) for m in leaf_lengths), key=lambda p: p.n))
+    return FFTPlan(
+        n=n,
+        levels=row_plan.levels,
+        leaf_passes=leaves,
+        passes=compile_passes2d(n, n2, fused_max),
+        n2=n2,
+    )
+
+
 def vmem_bytes(p: Pass, batch_tile: int) -> int:
     """Estimated VMEM working set of one grid step of a leaf pass.
 
@@ -311,7 +394,7 @@ def pick_batch_tile(p: Pass, budget: int = 8 * 1024 * 1024) -> int:
     return bt
 
 
-def pass_hbm_bytes(p: Pass, batch: int = 1) -> int:
+def pass_hbm_bytes(p: Pass, batch: int = 1, other: int = 1) -> int:
     """Modeled HBM traffic of one program pass, split-complex float32.
 
     Signal read + signal write, plus the chunked twiddle LUT (streamed once
@@ -319,12 +402,16 @@ def pass_hbm_bytes(p: Pass, batch: int = 1) -> int:
     (0, 0), so fetched from HBM once regardless of grid size).  This is the
     figure ``launch.dryrun`` / ``analysis.roofline`` report per pass so the
     round-trip count is observable, and what the tests assert.
+
+    ``other`` is the multi-axis multiplier: the length of the image axis the
+    pass does *not* transform (``n2`` for row passes, the row length ``n``
+    for column passes — every 2-D pass streams the whole image).
     """
     f32 = 4
     if p.kind == "reorder":
-        return 2 * batch * p.n * 2 * f32
+        return 2 * batch * other * p.n * 2 * f32
     pencils, _stride, f = p.view_in if p.view_in else (1, 1, p.n)
-    sig = batch * pencils * f * 2 * f32
+    sig = batch * other * pencils * f * 2 * f32
     tw = 0
     if p.twiddle_after:
         tw = p.twiddle_after[0] * p.twiddle_after[1] * 2 * f32
@@ -335,9 +422,28 @@ def pass_hbm_bytes(p: Pass, batch: int = 1) -> int:
     return 2 * sig + tw + luts
 
 
-def program_hbm_bytes(passes: tuple[Pass, ...], batch: int = 1) -> int:
-    """Total modeled HBM traffic of a pass program."""
-    return sum(pass_hbm_bytes(p, batch) for p in passes)
+def pass_other(p: Pass, plan: FFTPlan) -> int:
+    """The non-transformed image-axis length a pass of ``plan`` streams —
+    the ``other`` multiplier :func:`pass_hbm_bytes` charges (1 for 1-D)."""
+    if plan.n2 is None:
+        return 1
+    return plan.n if p.axis == -2 else plan.n2
+
+
+def program_hbm_bytes(
+    passes: tuple[Pass, ...], batch: int = 1, shape2d: tuple | None = None
+) -> int:
+    """Total modeled HBM traffic of a pass program.
+
+    ``shape2d=(n2, n)`` scales each pass by the image axis it streams but
+    does not transform (a 2-D program's passes all touch the whole image).
+    """
+    if shape2d is None:
+        return sum(pass_hbm_bytes(p, batch) for p in passes)
+    n2, n = shape2d
+    return sum(
+        pass_hbm_bytes(p, batch, n if p.axis == -2 else n2) for p in passes
+    )
 
 
 def _pass_chunk_bytes(p: Pass, c: int) -> int:
@@ -352,27 +458,39 @@ def _pass_chunk_bytes(p: Pass, c: int) -> int:
     return 3 * sig + tw + luts  # in, intermediate, out (+ twiddle slab)
 
 
-def pick_pass_chunk(p: Pass, budget: int = 8 * 1024 * 1024) -> int:
+def pick_pass_chunk(
+    p: Pass, budget: int = 8 * 1024 * 1024, width: int | None = None
+) -> int:
     """Per-grid-step chunk (columns for strided passes, rows for contiguous
     ones) — largest power of two fitting the VMEM budget.
+
+    ``width`` overrides the chunked-axis length — 2-D column passes chunk
+    the image width (possibly the n//2+1 bins of an rfft2 half-spectrum),
+    which the per-axis pencil view cannot know.  Non-power-of-two widths
+    start from the largest power of two below them; the executor pads the
+    last partial chunk.
 
     The budget is binding: for large factors the chunk drops below one
     128-lane tile (padded sublanes beat a working set that Mosaic cannot
     place in VMEM at all — interpret-mode CI would never catch that)."""
-    pencils, stride, _f = p.view_in
-    axis = stride if stride > 1 else pencils
-    c = axis
+    if width is None:
+        pencils, stride, _f = p.view_in
+        width = stride if stride > 1 else pencils
+    c = 1 << (max(width, 1).bit_length() - 1)  # largest pow2 <= width
     while c > 1 and _pass_chunk_bytes(p, c) > budget:
         c //= 2
-    return max(min(c, axis), 1)
+    return max(c, 1)
 
 
-def describe(n: int, batch: int = 1) -> str:
+def describe_program(p: FFTPlan, batch: int = 1) -> str:
     """Human-readable pass program, e.g. for logging/EXPERIMENTS.md."""
-    p = plan_fft(n)
-    parts = [f"N={n}: {p.hbm_round_trips} HBM round trip(s)"]
+    if p.n2 is not None:
+        head = f"N={p.n2}x{p.n} (axis -2 x axis -1)"
+    else:
+        head = f"N={p.n}"
+    parts = [f"{head}: {p.hbm_round_trips} HBM round trip(s)"]
     for i, ps in enumerate(p.passes):
-        mb = pass_hbm_bytes(ps, batch) / 1e6
+        mb = pass_hbm_bytes(ps, batch, pass_other(ps, p)) / 1e6
         if ps.kind == "reorder":
             parts.append(f"pass {i}: digit-reversal reorder (~{mb:.1f} MB)")
             continue
@@ -382,7 +500,9 @@ def describe(n: int, batch: int = 1) -> str:
             if ps.kind == "direct"
             else f"fused four-step n={f} ({ps.n1} x {ps.n2})"
         )
-        if pencils == 1:
+        if ps.axis == -2:
+            layout = f"axis -2 in-place columns (width {p.n})"
+        elif pencils == 1:
             layout = "whole-signal"
         elif stride == 1:
             layout = f"{pencils} rows"
@@ -396,3 +516,9 @@ def describe(n: int, batch: int = 1) -> str:
         fold = " -> natural order (fused write)" if ps.view_out != ps.view_in else ""
         parts.append(f"pass {i}: {layout} {algo}{tw}{fold} (~{mb:.1f} MB)")
     return "; ".join(parts)
+
+
+def describe(n: int, batch: int = 1, n2: int | None = None) -> str:
+    """Describe the pass program for a 1-D length-``n`` transform, or — with
+    ``n2`` — the joint multi-axis program of an ``(..., n2, n)`` 2-D one."""
+    return describe_program(plan_fft2(n, n2) if n2 is not None else plan_fft(n), batch)

@@ -45,7 +45,14 @@ from repro.kernels import pencil
 
 Planes = Tuple[jax.Array, jax.Array]
 
-__all__ = ["execute_plan", "execute_program", "fft", "ifft", "should_interpret"]
+__all__ = [
+    "execute_plan",
+    "execute_program",
+    "execute_program2d",
+    "fft",
+    "ifft",
+    "should_interpret",
+]
 
 
 def should_interpret() -> bool:
@@ -94,7 +101,7 @@ def _pad_batch(xr, xi, bt):
     if pad:
         xr = jnp.pad(xr, ((0, pad), (0, 0)))
         xi = jnp.pad(xi, ((0, pad), (0, 0)))
-    return xr, xi, b
+    return xr, xi, b, pad
 
 
 def _tile_for(p: plan_lib.Pass, batch_tiles: Mapping[int, int] | None) -> int:
@@ -110,28 +117,114 @@ def _leaf_kernel(
     if p.n == 1:
         return xr, xi
     bt = _tile_for(p, batch_tiles)
-    xr, xi, b = _pad_batch(xr, xi, bt)
+    xr, xi, b, pad = _pad_batch(xr, xi, bt)
     if p.kind == "direct":
         wr, wi = _direct_luts(p.n, inverse)
         yr, yi = dft_matmul_call(
             xr, xi, jnp.asarray(wr), jnp.asarray(wi), batch_tile=bt, interpret=interpret
         )
-        return yr[:b], yi[:b]
-    w1r, w1i, tr, ti, w2r, w2i = _fused_luts(p.n1, p.n2, inverse)
-    yr, yi = fft4step_call(
-        xr,
-        xi,
-        jnp.asarray(w1r),
-        jnp.asarray(w1i),
-        jnp.asarray(tr),
-        jnp.asarray(ti),
-        jnp.asarray(w2r),
-        jnp.asarray(w2i),
-        batch_tile=bt,
-        natural_order=natural_order,
-        interpret=interpret,
+    else:
+        w1r, w1i, tr, ti, w2r, w2i = _fused_luts(p.n1, p.n2, inverse)
+        yr, yi = fft4step_call(
+            xr,
+            xi,
+            jnp.asarray(w1r),
+            jnp.asarray(w1i),
+            jnp.asarray(tr),
+            jnp.asarray(ti),
+            jnp.asarray(w2r),
+            jnp.asarray(w2i),
+            batch_tile=bt,
+            natural_order=natural_order,
+            interpret=interpret,
+        )
+    # The identity slice would still cost a jaxpr eqn — keep unpadded
+    # schedules at pallas_call + reshape only.
+    return (yr, yi) if pad == 0 else (yr[:b], yi[:b])
+
+
+def _apply_pass(
+    xr, xi, p: plan_lib.Pass, fs, inverse, interpret, batch_tiles
+) -> Planes:
+    """One row-axis program pass over (B, n) split planes."""
+    b, n = xr.shape
+    if p.kind == "reorder":
+        # Digit-reversal relayout — only programs with ≥ 3 factors
+        # (N > 2³²) reach this; plain XLA transpose, one HBM round trip.
+        perm = (0,) + tuple(range(len(fs), 0, -1))
+        xr = xr.reshape(b, *fs).transpose(perm).reshape(b, n)
+        xi = xi.reshape(b, *fs).transpose(perm).reshape(b, n)
+        return xr, xi
+    pencils, stride, f = p.view_in
+    if pencils == 1:
+        # Whole-signal pass: the ≤ FUSED_MAX one-call regime.
+        return _leaf_kernel(
+            xr, xi, p, inverse, interpret, batch_tiles,
+            natural_order=p.order == "natural",
+        )
+    luts = _transform_luts(p, inverse)
+    chunk = plan_lib.pick_pass_chunk(p)
+    if stride == 1:
+        if p.view_out != p.view_in:
+            # Row pass with the natural-order transpose fused into its
+            # strided write: (b, p, f) → (b, f, p) flattens naturally.
+            xr3 = xr.reshape(b, pencils, f)
+            xi3 = xi.reshape(b, pencils, f)
+            yr3, yi3 = pencil.rows_natural_call(
+                xr3, xi3, luts, kind=p.kind, n1=p.n1, n2=p.n2,
+                chunk=chunk, interpret=interpret,
+            )
+            return yr3.reshape(b, n), yi3.reshape(b, n)
+        # Pencil-order row pass: contiguous rows, plain leaf kernel.
+        rr = xr.reshape(b * pencils, f)
+        ri = xi.reshape(b * pencils, f)
+        rr, ri = _leaf_kernel(rr, ri, p, inverse, interpret, batch_tiles)
+        return rr.reshape(b, n), ri.reshape(b, n)
+    # Strided-column pass (+ fused inter-factor twiddle epilogue).
+    groups = pencils // stride
+    xr3 = xr.reshape(b * groups, f, stride)
+    xi3 = xi.reshape(b * groups, f, stride)
+    twiddle = None
+    if p.twiddle_after is not None:
+        twiddle = _pass_twiddle_luts(*p.twiddle_after, inverse)
+    xr3, xi3 = pencil.cols_pass_call(
+        xr3, xi3, luts, twiddle, kind=p.kind, n1=p.n1, n2=p.n2,
+        chunk=chunk, interpret=interpret,
     )
-    return yr[:b], yi[:b]
+    return xr3.reshape(b, n), xi3.reshape(b, n)
+
+
+def image_chunk(p: plan_lib.Pass, w: int) -> int:
+    """Column-pass chunk for an image of width ``w``.  Ragged widths (the
+    m+1 half-spectrum bins of rfft2): a chunk near the width would nearly
+    double the pass (pow2-floored chunk + 1 ragged column → a whole extra
+    chunk of padding), so shrink until the padding is under half a chunk —
+    but not below one 128-lane tile."""
+    chunk = plan_lib.pick_pass_chunk(p, width=w)
+    while chunk > 128 and (-w) % chunk >= chunk // 2:
+        chunk //= 2
+    return chunk
+
+
+def _cols_image_pass(xr, xi, p: plan_lib.Pass, inverse, interpret) -> Planes:
+    """In-place column pass of a 2-D program: transform axis -2 of the
+    (B, n2, w) image view through the strided-pencil kernel, chunking the
+    image width.  Non-power-of-two widths (the m+1 bins of an rfft2
+    half-spectrum) pad up to a chunk multiple around the call."""
+    b, f, w = xr.shape
+    luts = _transform_luts(p, inverse)
+    chunk = image_chunk(p, w)
+    pad = (-w) % chunk
+    if pad:
+        xr = jnp.pad(xr, ((0, 0), (0, 0), (0, pad)))
+        xi = jnp.pad(xi, ((0, 0), (0, 0), (0, pad)))
+    yr, yi = pencil.cols_pass_call(
+        xr, xi, luts, kind=p.kind, n1=p.n1, n2=p.n2,
+        chunk=chunk, interpret=interpret,
+    )
+    if pad:
+        yr, yi = yr[..., :w], yi[..., :w]
+    return yr, yi
 
 
 def execute_program(
@@ -150,61 +243,42 @@ def execute_program(
     """
     if interpret is None:
         interpret = should_interpret()
-    b, n = xr.shape
+    fs = [q.n for q in passes if q.kind != "reorder"]
     for p in passes:
-        if p.kind == "reorder":
-            # Digit-reversal relayout — only programs with ≥ 3 factors
-            # (N > 2³²) reach this; plain XLA transpose, one HBM round trip.
-            fs = [q.n for q in passes if q.kind != "reorder"]
-            perm = (0,) + tuple(range(len(fs), 0, -1))
-            xr = xr.reshape(b, *fs).transpose(perm).reshape(b, n)
-            xi = xi.reshape(b, *fs).transpose(perm).reshape(b, n)
+        xr, xi = _apply_pass(xr, xi, p, fs, inverse, interpret, batch_tiles)
+    return xr, xi
+
+
+def execute_program2d(
+    xr: jax.Array,
+    xi: jax.Array,
+    passes: Sequence[plan_lib.Pass],
+    *,
+    inverse: bool = False,
+    interpret: bool | None = None,
+    batch_tiles: Mapping[int, int] | None = None,
+) -> Planes:
+    """Walk a mixed-axis pass program over 3-D (B, n2, n) image planes.
+
+    ``axis=-1`` passes run the 1-D machinery over the ``(B·n2, n)`` row
+    view; ``axis=-2`` passes transform the columns of the ``(B, n2, n)``
+    view in place through the strided-pencil kernel.  The row→column
+    handoff is a free row-major reshape — zero materialized transposes,
+    which is what makes a planned ``fft2`` exactly rows+cols kernel calls.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    b, rows, n = xr.shape
+    fs = [q.n for q in passes if q.kind != "reorder" and q.axis == -1]
+    for p in passes:
+        if p.axis == -2:
+            xr, xi = _cols_image_pass(xr, xi, p, inverse, interpret)
             continue
-        pencils, stride, f = p.view_in
-        if pencils == 1:
-            # Whole-signal pass: the ≤ FUSED_MAX one-call regime.
-            xr, xi = _leaf_kernel(
-                xr, xi, p, inverse, interpret, batch_tiles,
-                natural_order=p.order == "natural",
-            )
-            continue
-        luts = _transform_luts(p, inverse)
-        chunk = plan_lib.pick_pass_chunk(p)
-        if stride == 1:
-            if p.view_out != p.view_in:
-                # Row pass with the natural-order transpose fused into its
-                # strided write: (b, p, f) → (b, f, p) flattens naturally.
-                xr3 = xr.reshape(b, pencils, f)
-                xi3 = xi.reshape(b, pencils, f)
-                yr3, yi3 = pencil.rows_natural_call(
-                    xr3, xi3, luts, kind=p.kind, n1=p.n1, n2=p.n2,
-                    chunk=chunk, interpret=interpret,
-                )
-                xr = yr3.reshape(b, n)
-                xi = yi3.reshape(b, n)
-            else:
-                # Pencil-order row pass: contiguous rows, plain leaf kernel.
-                rr = xr.reshape(b * pencils, f)
-                ri = xi.reshape(b * pencils, f)
-                rr, ri = _leaf_kernel(
-                    rr, ri, p, inverse, interpret, batch_tiles
-                )
-                xr = rr.reshape(b, n)
-                xi = ri.reshape(b, n)
-            continue
-        # Strided-column pass (+ fused inter-factor twiddle epilogue).
-        groups = pencils // stride
-        xr3 = xr.reshape(b * groups, f, stride)
-        xi3 = xi.reshape(b * groups, f, stride)
-        twiddle = None
-        if p.twiddle_after is not None:
-            twiddle = _pass_twiddle_luts(*p.twiddle_after, inverse)
-        xr3, xi3 = pencil.cols_pass_call(
-            xr3, xi3, luts, twiddle, kind=p.kind, n1=p.n1, n2=p.n2,
-            chunk=chunk, interpret=interpret,
+        xr2, xi2 = _apply_pass(
+            xr.reshape(b * rows, n), xi.reshape(b * rows, n),
+            p, fs, inverse, interpret, batch_tiles,
         )
-        xr = xr3.reshape(b, n)
-        xi = xi3.reshape(b, n)
+        xr, xi = xr2.reshape(b, rows, n), xi2.reshape(b, rows, n)
     return xr, xi
 
 
@@ -244,10 +318,31 @@ def execute_plan(
     fft→pointwise→ifft fast path).  ``axis=-2`` transforms the second-to-last
     axis in place via the strided-column kernel when the plan is single-pass
     (the distributed pencil driver's case), falling back to a transpose
-    sandwich otherwise.
+    sandwich otherwise.  A multi-axis plan (``fft_plan.n2`` set) consumes a
+    3-D (..., n2, n) image and walks its joint program with
+    :func:`execute_program2d`.
     """
     if interpret is None:
         interpret = should_interpret()
+    if fft_plan.n2 is not None:
+        if axis != -1:
+            raise ValueError("multi-axis plans always transform the last two axes")
+        rows, n = xr.shape[-2:]
+        if (rows, n) != (fft_plan.n2, fft_plan.n):
+            raise ValueError(
+                f"plan is for ({fft_plan.n2}, {fft_plan.n}) images, got ({rows}, {n})"
+            )
+        lead = xr.shape[:-2]
+        b = int(np.prod(lead)) if lead else 1
+        yr, yi = execute_program2d(
+            xr.reshape(b, rows, n),
+            xi.reshape(b, rows, n),
+            fft_plan.passes,
+            inverse=inverse,
+            interpret=interpret,
+            batch_tiles=batch_tiles,
+        )
+        return yr.reshape(*lead, rows, n), yi.reshape(*lead, rows, n)
     if axis == -2:
         n, q = xr.shape[-2:]
         if n != fft_plan.n:
@@ -256,15 +351,8 @@ def execute_plan(
         b = int(np.prod(lead)) if lead else 1
         if len(fft_plan.passes) == 1 and fft_plan.n > 1:
             p = _cols_plan_pass(fft_plan, q)
-            yr, yi = pencil.cols_pass_call(
-                xr.reshape(b, n, q),
-                xi.reshape(b, n, q),
-                _transform_luts(p, inverse),
-                kind=p.kind,
-                n1=p.n1,
-                n2=p.n2,
-                chunk=plan_lib.pick_pass_chunk(p),
-                interpret=interpret,
+            yr, yi = _cols_image_pass(
+                xr.reshape(b, n, q), xi.reshape(b, n, q), p, inverse, interpret
             )
             return yr.reshape(*lead, n, q), yi.reshape(*lead, n, q)
         xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)

@@ -164,19 +164,27 @@ def _lower_decode(cfg, shape, mesh, par):
 
 
 def _fft_plan_info(fft_shape, model_n: int) -> dict:
-    """Plan metadata recorded alongside the lowering: the per-leaf pass
-    programs (one plan per pencil factor) the pencil driver will execute,
-    with modeled HBM bytes per pass so the round-trip count is observable
-    in every artifact, not just asserted by tests."""
+    """Plan metadata recorded alongside the lowering, with modeled HBM bytes
+    per pass so the round-trip count is observable in every artifact, not
+    just asserted by tests.  1-D pencil cells record the per-leaf pass
+    programs (one plan per pencil factor); 2-D cells record the ONE joint
+    rows+columns program ``pfft2d`` now splits around its all-to-alls."""
     from repro.core import distributed as dist
     from repro.core import plan as plan_lib
 
     if fft_shape.kind == "fft2d":
-        leaf_ns = [fft_shape.n, fft_shape.n2]
-        total = fft_shape.n * fft_shape.n2
-    else:
-        leaf_ns = list(dist.pencil_factors(fft_shape.n, model_n))
-        total = fft_shape.n
+        # (batch, n1, n2) images: last axis n2 rows-first, columns n1.
+        n_row, n_col = fft_shape.n2, fft_shape.n
+        return {
+            "leaf_lengths": [n_col, n_row],
+            "joint_schedule": plan_lib.describe(n_row, n2=n_col),
+            "hbm_round_trips": plan_lib.plan_fft2(n_row, n_col).hbm_round_trips,
+            "pass_programs": [
+                rl.fft_pass_report(n_row, batch=fft_shape.batch, n2=n_col)
+            ],
+        }
+    leaf_ns = list(dist.pencil_factors(fft_shape.n, model_n))
+    total = fft_shape.n
     # Schedule facts only — backend negotiation on the dry-run host (CPU)
     # would misstate what the production TPU pencil driver picks.
     return {

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 from _hyp import given, settings, st
 
-from repro.core.conv import fft_conv, next_pow2
+from repro.core.conv import fft_conv, next_pow2, toeplitz_conv_ref
 
 
 def _direct_causal(x, h):
@@ -29,6 +29,16 @@ def test_fft_conv_matches_direct(rng):
     y = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(h)))
     ref = _direct_causal(x, h[None])
     np.testing.assert_allclose(y, ref, atol=1e-3)
+
+
+def test_fft_conv_per_channel_filters_vs_toeplitz(rng):
+    # Distinct per-channel filters: the Toeplitz oracle now broadcasts them
+    # properly, so this actually exercises the multi-filter path.
+    x = rng.standard_normal((3, 4, 96)).astype(np.float32)
+    h = rng.standard_normal((4, 24)).astype(np.float32)
+    y = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(h)))
+    ref = toeplitz_conv_ref(x, h[None])
+    np.testing.assert_allclose(y, ref, atol=2e-3)
 
 
 def test_fft_conv_full_mode(rng):
