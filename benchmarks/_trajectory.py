@@ -1,0 +1,36 @@
+"""Shared benchmark-trajectory append: one JSON history file per suite.
+
+Each full benchmark run appends one timestamped entry to its
+``BENCH_*.json`` so later PRs can diff numbers against this PR's baseline
+on the same host.  One implementation for all suites, so format/robustness
+changes (e.g. the corrupt-history fallback) happen in one place.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+
+def append_trajectory(path: str, **payload) -> None:
+    """Append ``{timestamp, backend, **payload}`` to the JSON list at
+    ``path`` (created if missing; unreadable history starts fresh)."""
+    entry = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        **payload,
+    }
+    path = os.path.abspath(path)
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)

@@ -1,23 +1,52 @@
-"""FFT long-convolution layer vs direct convolution — the LM integration.
+"""FFT long-convolution: one-shot vs overlap-save vs direct — the LM path.
 
-Shows the O(L log L) crossover that justifies the spectral-mixer layers in
-the SSM/hybrid configs, and benchmarks the spectral block forward itself.
+Sweeps (L, Lh) pairs through the three schedules the conv layer can take:
+
+* ``one_shot``     — ``fft_conv(overlap_save=False)``: ONE padded transform
+  of ``next_pow2(L + Lh - 1)`` (split-regime pass program for long signals);
+* ``overlap_save`` — ``fft_conv_os``: fused-regime blocks batched through
+  one cached plan pair (the Adámek et al. schedule on the planned-FFT API);
+* ``direct``       — ``jnp.convolve`` (O(L·Lh); skipped once L·Lh is large
+  enough to dwarf the FFT paths — the crossover is the point).
+
+Each row carries ``analysis.roofline.conv_report``'s modeled HBM bytes for
+both FFT schedules so the measured ratio can be read against the model, and
+full runs append a ``BENCH_conv.json`` trajectory entry so later PRs can
+track the overlap-save speedup against this baseline.  ``--smoke`` runs a
+tiny sweep and cross-checks the two FFT paths against each other, so CI
+exercises the overlap-save engine end to end.
+
+  PYTHONPATH=src python -m benchmarks.bench_fftconv [--smoke]
 """
 
 from __future__ import annotations
 
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._trajectory import append_trajectory
+from repro.analysis import roofline as rl
 from repro.configs.base import ModelConfig
 from repro.core.conv import fft_conv
+from repro.core.overlap import fft_conv_os
 from repro.models.layers import spectral
 from repro.utils.params import unzip
 
-LENGTHS = [256, 1024, 4096, 16384]
+# (L, Lh): filter lengths are the odd Hyena/SAR-style taps, signals span the
+# fused regime up to the 1M-sample split regime overlap-save exists for.
+SWEEP = [(2**14, 257), (2**16, 1025), (2**18, 4097), (2**20, 4097)]
+SMOKE_SWEEP = [(2**12, 129)]
+
+#: jnp.convolve is O(L·Lh); beyond this many MACs per row it only adds
+#: minutes to the sweep without informing the crossover.
+DIRECT_MAC_LIMIT = 2**28
+
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "BENCH_conv.json")
 
 
 def _time(fn, *args, reps=3, warmup=1) -> float:
@@ -31,31 +60,43 @@ def _time(fn, *args, reps=3, warmup=1) -> float:
     return min(ts)
 
 
-def _direct_conv(x, h):
-    # causal direct conv via correlation with flipped kernel
-    L = x.shape[-1]
-    pad = h.shape[-1] - 1
-    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, 0)))
-    return jax.lax.conv_general_dilated(
-        xp[:, :, None, :], h[:, None, None, ::-1],
-        window_strides=(1, 1), padding="VALID",
-        dimension_numbers=("NCHW", "OIHW", "NCHW"),
-        feature_group_count=x.shape[1],
-    )[:, :, 0, :L]
+def run(sweep, reps=3, batch=4, check=False):
+    rows = []
+    for L, Lh in sweep:
+        x = jnp.asarray(np.random.randn(batch, L).astype(np.float32))
+        h = jnp.asarray(np.random.randn(Lh).astype(np.float32))
+        # xla backend: same arithmetic as the Pallas kernels, which are
+        # TPU-targeted — interpret-mode timing is meaningless.
+        f_one = jax.jit(lambda a, b: fft_conv(a, b, backend="xla", overlap_save=False))
+        f_os = jax.jit(lambda a, b: fft_conv_os(a, b, backend="xla"))
+        report = rl.conv_report(L, Lh, batch=batch)
+        row = {
+            "L": L,
+            "Lh": Lh,
+            "batch": batch,
+            "one_shot_us": _time(f_one, x, h, reps=reps) * 1e6,
+            "overlap_save_us": _time(f_os, x, h, reps=reps) * 1e6,
+            "block": report["overlap_save"]["block"],
+            "num_blocks": report["overlap_save"]["num_blocks"],
+            "modeled_one_shot_gb": report["one_shot"]["hbm_bytes"] / 1e9,
+            "modeled_os_gb": report["overlap_save"]["hbm_bytes"] / 1e9,
+        }
+        if L * Lh <= DIRECT_MAC_LIMIT:
+            f_dir = jax.jit(
+                jax.vmap(lambda a, b: jnp.convolve(a, b, mode="full")[:L], (0, None))
+            )
+            row["direct_us"] = _time(f_dir, x, h, reps=reps) * 1e6
+        if check:
+            err = float(
+                jnp.abs(f_one(x, h) - f_os(x, h)).max() / jnp.abs(f_one(x, h)).max()
+            )
+            assert err < 1e-4, f"overlap-save disagrees with one-shot: {err}"
+            row["os_vs_one_shot_rel_err"] = err
+        rows.append(row)
+    return rows
 
 
-def main(emit=print):
-    emit("fftconv.name,seq_len,filter_len,direct_ms,fft_ms,speedup")
-    D = 8
-    for L in LENGTHS:
-        x = np.random.randn(2, D, L).astype(np.float32)
-        h = np.random.randn(D, L).astype(np.float32)  # global filter
-        f_fft = jax.jit(lambda a, b: fft_conv(a, b))
-        f_dir = jax.jit(_direct_conv)
-        t_f = _time(f_fft, jnp.asarray(x), jnp.asarray(h))
-        t_d = _time(f_dir, jnp.asarray(x), jnp.asarray(h))
-        emit(f"fftconv,{L},{L},{t_d*1e3:.2f},{t_f*1e3:.2f},{t_d/t_f:.2f}")
-
+def _spectral_block(emit):
     emit("spectral_block.name,seq_len,fwd_ms")
     cfg = ModelConfig(d_model=128, spectral_filter_len=1024, vocab_size=64)
     params, _ = unzip(spectral.spectral_init(jax.random.PRNGKey(0), cfg, jnp.float32))
@@ -65,5 +106,26 @@ def main(emit=print):
         emit(f"spectral_block,{L},{_time(fwd, params, x)*1e3:.2f}")
 
 
+def main(emit=print, smoke: bool = False):
+    sweep = SMOKE_SWEEP if smoke else SWEEP
+    reps = 2 if smoke else 3
+    emit(
+        "fftconv.name,seq_len,filter_len,block,num_blocks,direct_ms,"
+        "one_shot_ms,overlap_save_ms,modeled_one_shot_gb,modeled_os_gb"
+    )
+    rows = run(sweep, reps=reps, batch=2 if smoke else 4, check=smoke)
+    for r in rows:
+        direct = f"{r['direct_us']/1e3:.2f}" if "direct_us" in r else ""
+        emit(
+            f"fftconv,{r['L']},{r['Lh']},{r['block']},{r['num_blocks']},"
+            f"{direct},{r['one_shot_us']/1e3:.2f},{r['overlap_save_us']/1e3:.2f},"
+            f"{r['modeled_one_shot_gb']:.4f},{r['modeled_os_gb']:.4f}"
+        )
+    if smoke:
+        return
+    _spectral_block(emit)
+    append_trajectory(TRAJECTORY, conv=rows)
+
+
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

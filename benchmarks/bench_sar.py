@@ -16,7 +16,6 @@ append a ``BENCH_sar.json`` trajectory entry so later PRs can track the
 
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
@@ -25,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._trajectory import append_trajectory
 from repro.analysis import roofline as rl
 from repro.core import fft as F
 from repro.core.conv import fft_conv2d
@@ -95,23 +95,7 @@ def run_conv(scenes, reps=3):
 def _append_trajectory(fft_rows, conv_rows) -> None:
     """BENCH_sar.json: one entry per run, so later PRs can diff the 2-D
     program numbers against this PR's baseline on the same host."""
-    entry = {
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-        "backend": jax.default_backend(),
-        "fft2": fft_rows,
-        "range_conv": conv_rows,
-    }
-    path = os.path.abspath(TRAJECTORY)
-    history = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                history = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            history = []
-    history.append(entry)
-    with open(path, "w") as f:
-        json.dump(history, f, indent=1)
+    append_trajectory(TRAJECTORY, fft2=fft_rows, range_conv=conv_rows)
 
 
 def main(emit=print, smoke: bool = False):

@@ -19,7 +19,6 @@ split-regime speedup against this baseline.
 
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -27,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._trajectory import append_trajectory
 from repro.analysis import roofline as rl
 from repro.core import fft as F
 
@@ -94,22 +94,7 @@ def run(batch: int = 1, sizes=None, reps: int = 5):
 def _append_trajectory(all_rows) -> None:
     """BENCH_fft.json: one entry per run, so later PRs can diff the
     split-regime numbers against this PR's baseline on the same host."""
-    entry = {
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-        "backend": jax.default_backend(),
-        "rows": all_rows,
-    }
-    path = os.path.abspath(TRAJECTORY)
-    history = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                history = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            history = []
-    history.append(entry)
-    with open(path, "w") as f:
-        json.dump(history, f, indent=1)
+    append_trajectory(TRAJECTORY, rows=all_rows)
 
 
 def main(emit=print, smoke: bool = False):

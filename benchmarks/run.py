@@ -24,6 +24,8 @@ SUITES = {
 SMOKE_SUITES = {
     "table1": lambda: bench_table1.main(smoke=True),
     "sar": lambda: bench_sar.main(smoke=True),
+    # cross-checks overlap-save against one-shot, so CI exercises the engine
+    "fftconv": lambda: bench_fftconv.main(smoke=True),
 }
 
 

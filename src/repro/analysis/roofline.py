@@ -31,6 +31,7 @@ __all__ = [
     "model_flops",
     "summarize_cell",
     "fft_pass_report",
+    "conv_report",
 ]
 
 
@@ -186,6 +187,80 @@ def fft_pass_report(
     if n2 is not None:
         report["n2"] = n2
     return report
+
+
+def _rfft_conv_bytes(n: int, batch: int, plan_lib) -> int:
+    """Modeled HBM traffic of one rfft → ⊙H → irfft pair at length ``n``.
+
+    The packed complex programs (length n/2) at signal batch, the filter's
+    forward transform once, the Hermitian recombination epilogues (read m /
+    write m+1 planes per direction) and the spectrum multiply (two reads,
+    one write).  Split-complex float32 — the same conventions as
+    :func:`~repro.core.plan.pass_hbm_bytes`.
+    """
+    f32 = 4
+    m = n // 2
+    prog = plan_lib.plan_fft(max(m, 1)).passes
+    sig_fwd = plan_lib.program_hbm_bytes(prog, batch)
+    sig_inv = plan_lib.program_hbm_bytes(prog, batch)
+    filt_fwd = plan_lib.program_hbm_bytes(prog, 1)
+    # Recombination read+write per transform: 2·batch signal passes + the
+    # filter's one; spectrum multiply reads batch X planes + the broadcast
+    # H once and writes batch Y planes.
+    recomb = (2 * batch + 1) * (2 * m + 1) * 2 * f32
+    cmul_b = (2 * batch + 1) * (m + 1) * 2 * f32
+    return sig_fwd + sig_inv + filt_fwd + recomb + cmul_b
+
+
+def conv_report(L: int, Lh: int, batch: int = 1, hw: HW = V5E, block=None) -> dict:
+    """One-shot vs overlap-save modeled HBM traffic for an FFT convolution.
+
+    The one-shot path pads to ``next_pow2(L + Lh - 1)`` — beyond the fused
+    regime that is a split-regime pass program per transform.  Overlap-save
+    frames the signal into ``num_blocks`` blocks of ``block`` samples
+    (fused regime by construction) and batches them through one plan pair;
+    its extra costs — the framing gather, the tail scatter, and the
+    ``block/(block - Lh + 1)`` redundancy factor — are charged explicitly,
+    so the report shows where the crossover actually is rather than
+    asserting it.
+    """
+    from repro.core import overlap as ov  # local: analysis stays lazy
+    from repro.core import plan as plan_lib
+    from repro.core.conv import next_pow2
+
+    f32 = 4
+    n_one = next_pow2(L + Lh - 1)
+    one_bytes = _rfft_conv_bytes(n_one, batch, plan_lib)
+    one = {
+        "n": n_one,
+        "hbm_round_trips": 2 * plan_lib.plan_fft(n_one // 2).hbm_round_trips,
+        "hbm_bytes": one_bytes,
+        "memory_s": one_bytes / hw.hbm_bw,
+    }
+
+    B = ov.pick_block(Lh, block)
+    step = B - (Lh - 1)
+    nb = -(-L // step)
+    os_bytes = _rfft_conv_bytes(B, batch * nb, plan_lib)
+    # Framing gather (read L, write nb·B) + tail scatter (read nb·step,
+    # write L), real float32.
+    os_bytes += batch * (L + nb * B + nb * step + L) * f32
+    osd = {
+        "block": B,
+        "num_blocks": nb,
+        "valid_per_block": step,
+        "max_plan_n": B,
+        "hbm_bytes": os_bytes,
+        "memory_s": os_bytes / hw.hbm_bw,
+    }
+    return {
+        "L": L,
+        "Lh": Lh,
+        "batch": batch,
+        "one_shot": one,
+        "overlap_save": osd,
+        "bytes_ratio": one_bytes / os_bytes if os_bytes else float("inf"),
+    }
 
 
 def roofline_terms(

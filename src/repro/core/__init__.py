@@ -7,11 +7,13 @@ Layers:
   fft          plan-and-execute public API (FFTSpec → plan() → PlannedFFT)
                over a capability-negotiated backend registry
   conv         FFT-based long convolution (LM integration point)
+  overlap      overlap-save streaming convolution (blocks through small plans)
   distributed  pencil FFT over mesh axes (pod-scale all-to-all schedule)
 """
 
-from repro.core import conv, distributed, fft, fft_xla, plan, twiddle
+from repro.core import conv, distributed, fft, fft_xla, overlap, plan, twiddle
 from repro.core.conv import fft_conv
+from repro.core.overlap import StreamingConv, fft_conv_os
 from repro.core.fft import (
     FFTSpec,
     PlannedFFT,
@@ -36,9 +38,12 @@ __all__ = [
     "distributed",
     "fft",
     "fft_xla",
+    "overlap",
     "plan",
     "twiddle",
     "fft_conv",
+    "fft_conv_os",
+    "StreamingConv",
     "fft_fn",
     "fft2",
     "ifft",

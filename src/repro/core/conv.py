@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fft as fft_lib
+from repro.core import plan as plan_lib
 from repro.core.fft_xla import cmul
 
 __all__ = [
@@ -45,6 +46,7 @@ def fft_conv(
     causal: bool = True,
     axis: int = -1,
     backend: str | None = None,
+    overlap_save: bool | None = None,
 ) -> jax.Array:
     """Causal convolution of ``x`` with filter ``h`` along ``axis``.
 
@@ -54,15 +56,34 @@ def fft_conv(
     multiplies spectra, and truncates to the first L samples (causal) — the
     standard overlap-free long-conv used by Hyena/S4 layers.
 
+    ``overlap_save=None`` (default) auto-routes to
+    :func:`repro.core.overlap.fft_conv_os` whenever the one-shot padded
+    length would leave the fused one-round-trip regime
+    (``next_pow2(L + Lh - 1) > FUSED_MAX``) — long signals then run as many
+    fused-regime block transforms instead of one split-regime program.
+    ``True`` forces the overlap-save path, ``False`` forces one-shot.
+
     ``h`` is indexed over its *last* axis and broadcasts against ``x`` with
     the convolution axis moved last (e.g. per-channel filters of shape
     (D, Lh) against activations (B, D, L), or (B, S, D) with ``axis=1``).
+    Inputs are computed in float32 regardless of dtype (like
+    :func:`fft_conv2d`); the output is cast back to the input dtype.
     """
-    if axis != -1:
-        x = jnp.moveaxis(x, axis, -1)
-    L = x.shape[-1]
+    x = jnp.asarray(x)
+    L = x.shape[axis]
     Lh = h.shape[-1]
     n = next_pow2(L + Lh - 1)
+    if overlap_save or (overlap_save is None and n > plan_lib.FUSED_MAX):
+        from repro.core import overlap  # lazy: conv loads before overlap at package init
+
+        return overlap.fft_conv_os(
+            x, h, causal=causal, axis=axis, backend=backend
+        )
+    out_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    if axis != -1:
+        x = jnp.moveaxis(x, axis, -1)
     fwd = fft_lib.plan(fft_lib.FFTSpec(n=n, kind="rfft"), backend=backend)
     inv = fft_lib.plan(fft_lib.FFTSpec(n=n, kind="irfft"), backend=backend)
     xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n - L)])
@@ -74,7 +95,7 @@ def fft_conv(
     y = y[..., :L] if causal else y[..., : L + Lh - 1]
     if axis != -1:
         y = jnp.moveaxis(y, -1, axis)
-    return y
+    return y.astype(out_dtype)
 
 
 def toeplitz_conv_ref(x: np.ndarray, h: np.ndarray) -> np.ndarray:
@@ -116,8 +137,11 @@ def fft_conv2d(
 
     ``mode='same'`` returns the leading (H, W) window (causal 2-D: output
     pixel (i, j) only sees inputs at (≤ i, ≤ j)); ``mode='full'`` returns
-    the whole (H + Hh - 1, W + Wh - 1) linear convolution.
+    the whole (H + Hh - 1, W + Wh - 1) linear convolution.  Computed in
+    float32; the output is cast back to the input dtype.
     """
+    x = jnp.asarray(x)
+    out_dtype = x.dtype
     H, W = x.shape[-2:]
     Hh, Wh = h.shape[-2:]
     N2 = next_pow2(H + Hh - 1)
@@ -134,9 +158,9 @@ def fft_conv2d(
     Yr, Yi = cmul(Xr, Xi, Hr, Hi)
     y = inv((Yr, Yi))
     if mode == "same":
-        return y[..., :H, :W]
+        return y[..., :H, :W].astype(out_dtype)
     if mode == "full":
-        return y[..., : H + Hh - 1, : W + Wh - 1]
+        return y[..., : H + Hh - 1, : W + Wh - 1].astype(out_dtype)
     raise ValueError(f"mode must be 'same' or 'full', got {mode!r}")
 
 
@@ -155,10 +179,20 @@ def fft_conv_packed(
     HBM traffic and (distributed) all-to-all payload versus transforming
     each row separately — with zero recombination cost.
 
-    ``x``: (..., 2·B, L) real; pairs (2b, 2b+1) are packed together.
+    ``x``: (..., 2·B, L) real; pairs (2b, 2b+1) are packed together.  Odd
+    row counts are handled by packing a zero row with the last real one
+    (stripped from the output), so odd channel counts don't crash.
+    Computed in float32; the output is cast back to the input dtype.
     """
+    x = jnp.asarray(x)
+    out_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
     lead, twob, L = x.shape[:-2], x.shape[-2], x.shape[-1]
-    assert twob % 2 == 0, "needs an even batch of rows to pack"
+    odd = twob % 2
+    if odd:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, 1), (0, 0)])
+    rows = twob + odd
     xr = x[..., 0::2, :]
     xi = x[..., 1::2, :]
     Lh = h.shape[-1]
@@ -177,7 +211,8 @@ def fft_conv_packed(
     Hi_f = jnp.concatenate([Hi, -Hi[..., 1:m][..., ::-1]], axis=-1)
     Yr, Yi = cmul(Zr, Zi, Hr_f, Hi_f)
     yr, yi = inv((Yr, Yi))
-    out = jnp.stack([yr, yi], axis=-2).reshape(*lead, twob, n)
-    if causal:
-        return out[..., :L]
-    return out[..., : L + Lh - 1]
+    out = jnp.stack([yr, yi], axis=-2).reshape(*lead, rows, n)
+    if odd:
+        out = out[..., :twob, :]
+    out = out[..., :L] if causal else out[..., : L + Lh - 1]
+    return out.astype(out_dtype)

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import fft as fft_lib
 from repro.core import plan as plan_lib
+from repro.core import twiddle as tw
 from repro.core.fft_xla import cmul
 
 Planes = Tuple[jax.Array, jax.Array]
@@ -45,6 +46,7 @@ __all__ = [
     "pencil_factors",
     "pfft_sharded",
     "pifft_sharded",
+    "pconv_os_sharded",
     "shard_map_compat",
 ]
 
@@ -79,15 +81,15 @@ def pencil_factors(n: int, d: int) -> tuple[int, int]:
 
 
 def _local_twiddle(n1: int, n2: int, q: int, axis_name: str, inverse: bool):
-    """Twiddle slab T[k1, n2] for this device's n2 ∈ [d·q, (d+1)·q)."""
+    """Twiddle slab T[k1, n2] for this device's n2 ∈ [d·q, (d+1)·q).
+
+    Delegates to :func:`repro.core.twiddle.traced_twiddle`'s column window:
+    with x64 disabled (the default) the int64 iotas this used to build
+    silently downcast to int32 and the ``(k1·m2) % n`` reduction overflowed
+    for n > 2³¹ — the huge-N regime pencil FFTs exist for.
+    """
     d = jax.lax.axis_index(axis_name)
-    n = n1 * n2
-    k1 = jnp.arange(n1, dtype=jnp.int32)[:, None]
-    m2 = (d * q + jnp.arange(q, dtype=jnp.int32))[None, :]
-    red = ((k1.astype(jnp.int64) * m2.astype(jnp.int64)) % n).astype(jnp.float32)
-    ang = np.float32(2.0 * np.pi / n) * red
-    sign = 1.0 if inverse else -1.0
-    return jnp.cos(ang), sign * jnp.sin(ang)
+    return tw.traced_twiddle(n1, n2, inverse, col_start=d * q, col_count=q)
 
 
 def _a2a(x, axis_name, split_axis, concat_axis):
@@ -302,3 +304,58 @@ def pifft_sharded(xr, xi, mesh: Mesh, axis: str, *, from_pencil=False, backend=N
     return _shard_wrap(pifft, mesh, axis)(
         xr, xi, n=n, num_shards=d, from_pencil=from_pencil, backend=backend
     )
+
+
+def pconv_os_sharded(
+    x: jax.Array,
+    h: jax.Array,
+    mesh: Mesh,
+    axis: str,
+    *,
+    causal: bool = True,
+    block: int | None = None,
+    backend: str | None = None,
+) -> jax.Array:
+    """Distributed overlap-save convolution: blocks sharded over ``mesh[axis]``.
+
+    The overlap-save blocks of :func:`repro.core.overlap.fft_conv_os` are
+    embarrassingly parallel — every block carries its own ``Lh − 1`` history
+    in the overlapping frame — so the convolution shards over the *block*
+    axis with ``shard_map`` and pays **zero** all-to-alls, versus the 4 of
+    the pencil ``pfft → ⊙H → pifft`` path (and its transforms stay in the
+    fused one-round-trip regime, where the pencil leaves may not).
+
+    ``x``: (..., L) replicated input; ``h`` broadcasts like ``fft_conv``.
+    The block count is padded up to a multiple of the mesh axis size with
+    zero frames (their outputs fall past ``L_out`` and are sliced away).
+    Returns the (..., L) causal output (or L + Lh − 1 with
+    ``causal=False``), replicated — the framing gather and tail scatter run
+    outside the ``shard_map`` body.
+    """
+    from repro.core import overlap as ov  # lazy: distributed loads before overlap at package init
+
+    x = jnp.asarray(x)
+    out_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    d = mesh.shape[axis]
+    L, Lh = x.shape[-1], h.shape[-1]
+    B = ov.pick_block(Lh, block)
+    overlap = Lh - 1
+    step = B - overlap
+    L_out = L if causal else L + Lh - 1
+    nb = -(-L_out // step)
+    nb = -(-nb // d) * d  # whole blocks per shard; extras are zero frames
+    frames = ov.frame_signal(x, B, step, nb)
+    Hr, Hi = ov.filter_spectrum(h, B, backend)  # computed once, replicated
+    fspec = P(*([None] * (frames.ndim - 2)), axis, None)
+
+    def body(fr, hr, hi):
+        return ov.conv_frames(fr, hr, hi, overlap=overlap, backend=backend)
+
+    tails = shard_map_compat(
+        body, mesh, in_specs=(fspec, P(), P()), out_specs=fspec
+    )(frames, Hr, Hi)
+    lead = tails.shape[:-2]
+    y = tails.reshape(*lead, nb * step)[..., :L_out]
+    return y.astype(out_dtype)

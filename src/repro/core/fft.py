@@ -74,6 +74,7 @@ __all__ = [
     "get_backend",
     "use_backend",
     "default_backend",
+    "plan_log",
     "fft",
     "ifft",
     "rfft",
@@ -824,8 +825,26 @@ def plan(spec: FFTSpec | int, *, backend: Optional[str] = None) -> PlannedFFT:
     return _plan_cached(spec, name, jax.default_backend())
 
 
+#: Every (FFTSpec, backend name) materialized by :func:`_plan_cached`, in
+#: creation order.  Cache hits don't re-log, so the tail of the log after a
+#: snapshot is exactly the set of *new* schedules an operation forced —
+#: which is how the tests assert overlap-save never plans past FUSED_MAX.
+_PLAN_LOG: list = []
+
+
+def plan_log() -> tuple:
+    """Snapshot of every (spec, backend_name) pair planned this process."""
+    return tuple(_PLAN_LOG)
+
+
 @functools.lru_cache(maxsize=1024)
 def _plan_cached(spec: FFTSpec, backend_name: Optional[str], platform: str) -> PlannedFFT:
+    planned = _build_plan(spec, backend_name, platform)
+    _PLAN_LOG.append((spec, planned.backend.name))
+    return planned
+
+
+def _build_plan(spec: FFTSpec, backend_name: Optional[str], platform: str) -> PlannedFFT:
     if backend_name is None:
         entry = _negotiate(spec, platform)
     else:

@@ -28,6 +28,7 @@ __all__ = [
     "twiddle_grid",
     "pass_twiddle",
     "stage_twiddle",
+    "mulfrac_pow2",
     "traced_twiddle",
     "rfft_recomb_twiddle",
 ]
@@ -105,19 +106,79 @@ def stage_twiddle(l: int, inverse: bool = False) -> tuple[np.ndarray, np.ndarray
     )
 
 
-def traced_twiddle(n1: int, n2: int, inverse: bool = False):
+def mulfrac_pow2(k1, m2, n: int):
+    """frac((k1·m2) / n) for power-of-two ``n`` without 64-bit integers.
+
+    With x64 disabled (the default JAX config) ``jnp.int64`` iotas silently
+    downcast to int32, so the obvious ``(k1·m2) % n`` overflows for
+    ``n > 2³¹`` — exactly the huge-N regime on-device tables exist for.
+    Instead split both operands into 16-bit halves: every partial product
+    fits uint32 exactly, and because ``n`` is a power of two each partial's
+    contribution to the fractional phase reduces independently —
+    ``frac(p·2^s / n) = (p mod (n >> s)) / (n >> s)`` when ``n > 2^s`` and
+    0 otherwise (``p·2^s`` is then a multiple of ``n``).  When ``n >> s``
+    exceeds 2³² the mod is a no-op (``p < 2³²``) and is skipped, so the
+    decomposition is exact for any ``n`` up to 2⁶².
+
+    ``k1``/``m2``: non-negative integer arrays (values < 2³¹).  Returns a
+    float32 array in [0, 4) — callers feed it to cos/sin where only the
+    value mod 1 matters.
+    """
+    import jax.numpy as jnp
+
+    if n <= 0 or n & (n - 1):
+        raise ValueError(f"n must be a power of two, got {n}")
+    k1 = k1.astype(jnp.uint32)
+    m2 = m2.astype(jnp.uint32)
+    a, b = k1 >> 16, k1 & 0xFFFF
+    c, d = m2 >> 16, m2 & 0xFFFF
+
+    def term(p, shift):
+        if n <= (1 << shift):
+            return jnp.float32(0.0)
+        mod = n >> shift
+        if mod < (1 << 32):
+            p = p % jnp.uint32(mod)
+        return p.astype(jnp.float32) * np.float32(1.0 / mod)
+
+    # k1·m2 = ac·2³² + (ad + bc)·2¹⁶ + bd, each partial < 2³².
+    return term(a * c, 32) + term(a * d, 16) + term(b * c, 16) + term(b * d, 0)
+
+
+def traced_twiddle(
+    n1: int,
+    n2: int,
+    inverse: bool = False,
+    *,
+    col_start=0,
+    col_count: int | None = None,
+):
     """On-device twiddle grid for sizes too large to embed as constants.
 
-    Uses broadcasted iota + mod-n reduction in int32 so the trig argument is
-    exact; returns (real, imag) float32 planes of shape (n1, n2).
+    Returns (real, imag) float32 planes ``T[k1, j] = exp(∓2πi·k1·m2/n)`` with
+    ``n = n1·n2`` and ``m2 = col_start + j`` — the full (n1, n2) grid by
+    default, or an (n1, col_count) column window (``col_start`` may be a
+    traced scalar: the distributed driver passes ``axis_index·q`` so each
+    device builds only its own slab).
+
+    For ``n ≤ 2³¹`` the product ``k1·m2 < n`` fits int32 exactly; beyond
+    that :func:`mulfrac_pow2` keeps the reduction int32-safe — the previous
+    int64 iotas silently downcast to int32 under the default (x64-disabled)
+    config and overflowed precisely in the huge-N regime.
     """
     import jax.numpy as jnp
 
     n = n1 * n2
-    k1 = jnp.arange(n1, dtype=jnp.int64 if n > 2**31 else jnp.int32)[:, None]
-    m2 = jnp.arange(n2, dtype=k1.dtype)[None, :]
-    red = ((k1 * m2) % n).astype(jnp.float32)
-    ang = (2.0 * np.pi / n) * red
+    q = n2 if col_count is None else col_count
+    k1 = jnp.arange(n1, dtype=jnp.int32)[:, None]
+    m2 = (col_start + jnp.arange(q, dtype=jnp.int32))[None, :]
+    if n < 2**31:
+        # k1·m2 < n1·n2 = n < 2³¹ fits int32 (and n itself stays an int32
+        # scalar — at exactly 2³¹ the % n operand would fail to parse).
+        red = ((k1 * m2) % n).astype(jnp.float32)
+        ang = np.float32(2.0 * np.pi / n) * red
+    else:
+        ang = np.float32(2.0 * np.pi) * mulfrac_pow2(k1, m2, n)
     sign = 1.0 if inverse else -1.0
     return jnp.cos(ang), sign * jnp.sin(ang)
 

@@ -187,7 +187,7 @@ def _fft_plan_info(fft_shape, model_n: int) -> dict:
     total = fft_shape.n
     # Schedule facts only — backend negotiation on the dry-run host (CPU)
     # would misstate what the production TPU pencil driver picks.
-    return {
+    info = {
         "leaf_lengths": leaf_ns,
         "leaf_schedules": [plan_lib.describe(m) for m in leaf_ns],
         "hbm_round_trips": max(
@@ -201,6 +201,14 @@ def _fft_plan_info(fft_shape, model_n: int) -> dict:
             for m in leaf_ns
         ],
     }
+    if fft_shape.kind == "fftconv":
+        # One-shot vs overlap-save modeled bytes at a canonical 4k-tap
+        # filter, so every conv artifact shows the schedule the single-chip
+        # path would pick and what the blocked alternative costs.
+        info["conv_report"] = rl.conv_report(
+            fft_shape.n, 4097, batch=fft_shape.batch
+        )
+    return info
 
 
 def _lower_fft(fft_shape, mesh, par):

@@ -93,3 +93,35 @@ print('DIST_GRAD_OK')
 def test_distributed_fft_differentiable():
     out = run_in_subprocess(_GRAD_BODY, devices=8)
     assert "DIST_GRAD_OK" in out
+
+
+_CONV_OS_BODY = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import distributed as D
+from repro.core.conv import fft_conv
+
+mesh = jax.make_mesh((8,), ('x',))
+np.random.seed(3)
+x = np.random.randn(2, 50000).astype(np.float32)
+h = np.random.randn(257,).astype(np.float32)
+
+y = np.asarray(D.pconv_os_sharded(jnp.asarray(x), jnp.asarray(h), mesh, 'x',
+                                  block=1024))
+ref = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(h), overlap_save=False))
+rel = np.abs(y - ref).max() / np.abs(ref).max()
+assert rel < 1e-4, ('pconv_os', rel)
+
+# blocks are embarrassingly parallel: ZERO collectives in the program
+jx = str(jax.make_jaxpr(
+    lambda a, b: D.pconv_os_sharded(a, b, mesh, 'x', block=1024)
+)(jnp.asarray(x), jnp.asarray(h)))
+for coll in ('all_to_all', 'all_gather', 'psum', 'ppermute'):
+    assert coll not in jx, coll
+print('PCONV_OS_OK')
+"""
+
+
+@pytest.mark.slow
+def test_distributed_overlap_save_conv_8dev():
+    out = run_in_subprocess(_CONV_OS_BODY, devices=8)
+    assert "PCONV_OS_OK" in out

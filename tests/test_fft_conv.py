@@ -2,9 +2,16 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hyp import given, settings, st
 
-from repro.core.conv import fft_conv, next_pow2, toeplitz_conv_ref
+from repro.core.conv import (
+    fft_conv,
+    fft_conv2d,
+    fft_conv_packed,
+    next_pow2,
+    toeplitz_conv_ref,
+)
 
 
 def _direct_causal(x, h):
@@ -63,6 +70,55 @@ def test_fft_conv_property(L, Lh, seed):
     ref = _direct_causal(x, h)
     scale = max(1.0, np.abs(ref).max())
     np.testing.assert_allclose(y, ref, atol=2e-3 * scale)
+
+
+@pytest.mark.parametrize("rows", [3, 5])
+def test_fft_conv_packed_odd_rows(rows, rng):
+    # Odd row counts used to hard-assert; now a zero row is packed along
+    # with the last real one and stripped from the output.
+    x = rng.standard_normal((2, rows, 100)).astype(np.float32)
+    h = rng.standard_normal((16,)).astype(np.float32)
+    y = np.asarray(fft_conv_packed(jnp.asarray(x), jnp.asarray(h)))
+    assert y.shape == x.shape
+    ref = toeplitz_conv_ref(x, h)
+    np.testing.assert_allclose(y, ref, atol=2e-3)
+
+
+def test_fft_conv_packed_full_mode_odd_rows(rng):
+    x = rng.standard_normal((3, 60)).astype(np.float32)
+    h = rng.standard_normal((9,)).astype(np.float32)
+    y = np.asarray(fft_conv_packed(jnp.asarray(x), jnp.asarray(h), causal=False))
+    assert y.shape == (3, 68)
+    ref = np.stack([np.convolve(r, h, mode="full") for r in x])
+    np.testing.assert_allclose(y, ref, atol=2e-3)
+
+
+def test_fft_conv_bf16_in_f32_accurate_out(rng):
+    # bf16 inputs are computed in float32 (not fed raw to the kernels) and
+    # the output dtype is restored; only the final rounding is bf16.
+    x32 = rng.standard_normal((2, 3, 128)).astype(np.float32)
+    h32 = rng.standard_normal((3, 32)).astype(np.float32)
+    x = jnp.asarray(x32, jnp.bfloat16)
+    h = jnp.asarray(h32, jnp.bfloat16)
+    y = fft_conv(x, h)
+    assert y.dtype == jnp.bfloat16
+    ref = toeplitz_conv_ref(np.asarray(x, np.float32), np.asarray(h, np.float32)[None])
+    scale = np.abs(ref).max()
+    # one bf16 rounding of an f32-accurate result: ~2^-8 relative
+    np.testing.assert_allclose(np.asarray(y, np.float32), ref, atol=0.02 * scale)
+
+
+def test_fft_conv_packed_and_2d_restore_dtype(rng):
+    xb = jnp.asarray(rng.standard_normal((2, 4, 64)), jnp.bfloat16)
+    hb = jnp.asarray(rng.standard_normal((16,)), jnp.bfloat16)
+    assert fft_conv_packed(xb, hb).dtype == jnp.bfloat16
+    img = jnp.asarray(rng.standard_normal((16, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((3, 5)), jnp.bfloat16)
+    assert fft_conv2d(img, k).dtype == jnp.bfloat16
+    # float32 callers are untouched
+    assert fft_conv2d(jnp.asarray(rng.standard_normal((16, 32)), jnp.float32),
+                      jnp.asarray(rng.standard_normal((3, 5)), jnp.float32)
+                      ).dtype == jnp.float32
 
 
 @settings(max_examples=10, deadline=None)

@@ -138,3 +138,79 @@ def test_backends_agree(n, seed):
     ys = [np.asarray(F.fft(x, backend=b)) for b in BACKENDS]
     np.testing.assert_allclose(ys[0], ys[1], atol=1e-2)
     np.testing.assert_allclose(ys[0], ys[2], atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# twiddle overflow regression: huge-n traced tables with x64 DISABLED
+# ---------------------------------------------------------------------------
+
+
+def test_traced_twiddle_int32_safe_beyond_2_31():
+    """n > 2³¹ twiddles must be right under the default (x64-off) config.
+
+    The old implementation built jnp.int64 iotas which silently downcast to
+    int32 without x64, so the (k1·m2) % n reduction overflowed — producing
+    wrong twiddles exactly in the huge-N regime the traced tables exist for.
+    A column window keeps the table small while the products span ~2³³.
+    """
+    from repro.core import twiddle as tw
+
+    assert not jax.config.jax_enable_x64  # the regression's precondition
+    n1, n2 = 1 << 15, 1 << 18  # n = 2**33 > 2**31
+    n = n1 * n2
+    q = 64
+    start = n2 - q  # top of the range: k1·m2 up to ~n, the overflow zone
+    tr, ti = tw.traced_twiddle(n1, n2, col_start=start, col_count=q)
+    k1 = np.arange(n1, dtype=np.int64)[:, None]
+    m2 = (start + np.arange(q, dtype=np.int64))[None, :]
+    ang = (2.0 * np.pi / n) * ((k1 * m2) % n).astype(np.float64)
+    np.testing.assert_allclose(np.asarray(tr), np.cos(ang), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ti), -np.sin(ang), atol=2e-5)
+
+
+def test_traced_twiddle_at_exactly_2_31():
+    # The boundary case: n == 2**31 must take the int32-safe path (an int32
+    # `% n` operand would fail to parse at trace time).
+    from repro.core import twiddle as tw
+
+    n1, n2 = 1 << 15, 1 << 16  # n = 2**31
+    q, start = 32, (1 << 16) - 32
+    tr, ti = tw.traced_twiddle(n1, n2, col_start=start, col_count=q)
+    k1 = np.arange(n1, dtype=np.int64)[:, None]
+    m2 = (start + np.arange(q, dtype=np.int64))[None, :]
+    ang = (2.0 * np.pi / (n1 * n2)) * ((k1 * m2) % (n1 * n2)).astype(np.float64)
+    np.testing.assert_allclose(np.asarray(tr), np.cos(ang), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ti), -np.sin(ang), atol=2e-5)
+
+
+def test_traced_twiddle_small_n_matches_host_grid():
+    from repro.core import twiddle as tw
+
+    for n1, n2 in [(8, 16), (64, 64)]:
+        tr, ti = tw.traced_twiddle(n1, n2)
+        hr, hi = tw.twiddle_grid(n1, n2)
+        np.testing.assert_allclose(np.asarray(tr), hr, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ti), hi, atol=1e-6)
+        # the column window agrees with the full grid
+        wr, wi = tw.traced_twiddle(n1, n2, col_start=4, col_count=8)
+        np.testing.assert_allclose(np.asarray(wr), hr[:, 4:12], atol=1e-6)
+        np.testing.assert_allclose(np.asarray(wi), hi[:, 4:12], atol=1e-6)
+
+
+def test_mulfrac_pow2_exact_across_regimes():
+    from repro.core import twiddle as tw
+
+    rng = np.random.default_rng(7)
+    for e in (20, 31, 32, 33, 40, 48):
+        n = 1 << e
+        k1 = rng.integers(0, min(n, 2**31), size=(32, 1))
+        m2 = rng.integers(0, min(n, 2**31), size=(1, 32))
+        exact = ((k1 * m2) % n) / n
+        got = np.asarray(
+            tw.mulfrac_pow2(
+                jnp.asarray(k1, jnp.int32), jnp.asarray(m2, jnp.int32), n
+            )
+        ) % 1.0
+        err = np.abs(got - exact)
+        err = np.minimum(err, 1.0 - err)  # wrap at the 0/1 seam
+        assert err.max() < 1e-6, (e, err.max())

@@ -1,0 +1,233 @@
+"""Overlap-save convolution engine: oracles, plan-cache discipline, streaming."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fft as fft_lib
+from repro.core import plan as plan_lib
+from repro.core.conv import fft_conv, next_pow2, toeplitz_conv_ref
+from repro.core.overlap import (
+    OS_FACTOR,
+    StreamingConv,
+    fft_conv_os,
+    frame_signal,
+    pick_block,
+)
+
+
+def _new_specs(snapshot):
+    """Specs planned since ``snapshot`` (a set of plan_log entries)."""
+    return [
+        spec for spec, name in fft_lib.plan_log() if (spec, name) not in snapshot
+    ]
+
+
+# ---------------------------------------------------------------------------
+# block sizing + framing
+# ---------------------------------------------------------------------------
+
+
+def test_pick_block_defaults():
+    assert pick_block(4097) == min(8192 * OS_FACTOR, plan_lib.FUSED_MAX)
+    assert pick_block(129) == 256 * OS_FACTOR
+    assert pick_block(1) == 8  # degenerate 1-tap filter still plans rfft
+    # filters too long for the FUSED_MAX cap keep 50% valid samples instead
+    big = plan_lib.FUSED_MAX // 2 + 1
+    assert pick_block(big) == 2 * next_pow2(big)
+
+
+def test_pick_block_override_and_validation():
+    assert pick_block(33, block=128) == 128
+    with pytest.raises(ValueError):
+        pick_block(33, block=100)  # not a power of two
+    with pytest.raises(ValueError):
+        pick_block(129, block=128)  # no valid samples per block
+
+
+def test_frame_signal_windows(rng):
+    x = np.arange(10, dtype=np.float32)[None]
+    f = np.asarray(frame_signal(jnp.asarray(x), block=6, step=4, num_blocks=3))
+    assert f.shape == (1, 3, 6)
+    # frame 0 starts with the zero history, frame 1 overlaps frame 0 by 2
+    np.testing.assert_array_equal(f[0, 0], [0, 0, 0, 1, 2, 3])
+    np.testing.assert_array_equal(f[0, 1], [2, 3, 4, 5, 6, 7])
+    np.testing.assert_array_equal(f[0, 2], [6, 7, 8, 9, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# fft_conv_os oracles
+# ---------------------------------------------------------------------------
+
+
+def test_fft_conv_os_vs_toeplitz(rng):
+    x = rng.standard_normal((2, 3, 300)).astype(np.float32)
+    h = rng.standard_normal((3, 33)).astype(np.float32)
+    y = np.asarray(fft_conv_os(jnp.asarray(x), jnp.asarray(h), block=128))
+    ref = toeplitz_conv_ref(x, h[None])
+    np.testing.assert_allclose(y, ref, atol=2e-3)
+
+
+def test_fft_conv_os_full_mode(rng):
+    x = rng.standard_normal((1, 200)).astype(np.float32)
+    h = rng.standard_normal((1, 17)).astype(np.float32)
+    y = np.asarray(
+        fft_conv_os(jnp.asarray(x), jnp.asarray(h), causal=False, block=64)
+    )
+    ref = np.convolve(x[0], h[0], mode="full")[None]
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(y, ref, atol=2e-3)
+
+
+def test_fft_conv_os_axis(rng):
+    x = rng.standard_normal((130, 2)).astype(np.float32)
+    h = rng.standard_normal((9,)).astype(np.float32)
+    y = np.asarray(fft_conv_os(jnp.asarray(x), jnp.asarray(h), axis=0, block=32))
+    ref = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(h), axis=0))
+    np.testing.assert_allclose(y, ref, atol=2e-3)
+
+
+@pytest.mark.parametrize("L", [2**16, 2**18])
+def test_fft_conv_os_matches_one_shot(L, rng):
+    Lh = 4097
+    x = rng.standard_normal((2, L)).astype(np.float32)
+    h = rng.standard_normal((Lh,)).astype(np.float32)
+    y_one = np.asarray(
+        fft_conv(jnp.asarray(x), jnp.asarray(h), overlap_save=False)
+    )
+    y_os = np.asarray(fft_conv_os(jnp.asarray(x), jnp.asarray(h)))
+    scale = np.abs(y_one).max()
+    np.testing.assert_allclose(y_os, y_one, atol=1e-3 * scale)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "xla", "stockham"])
+def test_fft_conv_os_backends_agree(backend, rng):
+    # pallas runs interpret on CPU — the kernel path through the engine is
+    # exercised in the pallas-interpret CI job; small block keeps it cheap.
+    x = rng.standard_normal((2, 2**13)).astype(np.float32)
+    h = rng.standard_normal((129,)).astype(np.float32)
+    y = np.asarray(
+        fft_conv_os(jnp.asarray(x), jnp.asarray(h), block=2048, backend=backend)
+    )
+    ref = np.asarray(
+        fft_conv(jnp.asarray(x), jnp.asarray(h), overlap_save=False, backend="xla")
+    )
+    np.testing.assert_allclose(y, ref, atol=2e-3 * np.abs(ref).max())
+
+
+def test_fft_conv_os_dtype_restored(rng):
+    x = jnp.asarray(rng.standard_normal((2, 256)), jnp.bfloat16)
+    h = jnp.asarray(rng.standard_normal((17,)), jnp.bfloat16)
+    y = fft_conv_os(x, h, block=64)
+    assert y.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# plan-cache discipline: the acceptance criterion made literal
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_stays_fused_for_1m_signal(rng):
+    L, Lh = 2**20, 4097
+    x = rng.standard_normal((1, L)).astype(np.float32)
+    h = rng.standard_normal((Lh,)).astype(np.float32)
+    snapshot = set(fft_lib.plan_log())
+    y = np.asarray(fft_conv_os(jnp.asarray(x), jnp.asarray(h)))
+    for spec in _new_specs(snapshot):
+        assert max(spec.n, spec.n2 or 0) <= plan_lib.FUSED_MAX, (
+            f"overlap-save planned past the fused regime: {spec}"
+        )
+    # causal outputs only depend on the causal past: the head of the 1M
+    # result must equal the (one-shot, fused-regime) conv of the head.
+    head = 8192
+    ref = np.asarray(
+        fft_conv(jnp.asarray(x[..., :head]), jnp.asarray(h), overlap_save=False)
+    )
+    np.testing.assert_allclose(y[..., :head], ref, atol=1e-3 * np.abs(ref).max())
+
+
+def test_fft_conv_auto_routes_long_signals(rng):
+    L, Lh = 2**17, 4097  # next_pow2(L + Lh - 1) = 2**18 > FUSED_MAX
+    x = rng.standard_normal((1, L)).astype(np.float32)
+    h = rng.standard_normal((Lh,)).astype(np.float32)
+    snapshot = set(fft_lib.plan_log())
+    y_auto = np.asarray(fft_conv(jnp.asarray(x), jnp.asarray(h)))
+    assert all(
+        max(spec.n, spec.n2 or 0) <= plan_lib.FUSED_MAX
+        for spec in _new_specs(snapshot)
+    )
+    y_one = np.asarray(
+        fft_conv(jnp.asarray(x), jnp.asarray(h), overlap_save=False)
+    )
+    np.testing.assert_allclose(y_auto, y_one, atol=1e-3 * np.abs(y_one).max())
+
+
+def test_fft_conv_short_signals_stay_one_shot(rng):
+    # Under the routing threshold nothing changes: the one-shot rfft pair.
+    x = rng.standard_normal((2, 1024)).astype(np.float32)
+    h = rng.standard_normal((64,)).astype(np.float32)
+    snapshot = set(fft_lib.plan_log())
+    fft_conv(jnp.asarray(x), jnp.asarray(h))
+    kinds = {(s.kind, s.n) for s in _new_specs(snapshot)}
+    assert all(n <= plan_lib.FUSED_MAX for _, n in kinds)
+
+
+# ---------------------------------------------------------------------------
+# StreamingConv: chunked == one-shot
+# ---------------------------------------------------------------------------
+
+
+def _stream(sc, x, schedule):
+    state = sc.init_state(x.shape[:-1])
+    outs, pos = [], 0
+    for c in schedule:
+        y, state = sc(jnp.asarray(x[..., pos : pos + c]), state)
+        outs.append(np.asarray(y))
+        pos += c
+    assert pos == x.shape[-1]
+    return np.concatenate(outs, axis=-1), state
+
+
+@pytest.mark.parametrize(
+    "schedule",
+    [
+        [640] * 7 + [520],          # ragged final chunk
+        [64] * 78 + [8],            # every chunk smaller than Lh
+        [1000, 17, 3000, 983],      # mixed, including chunk << Lh
+    ],
+)
+def test_streaming_matches_one_shot(schedule, rng):
+    L, Lh = sum(schedule), 129
+    x = rng.standard_normal((2, L)).astype(np.float32)
+    h = rng.standard_normal((Lh,)).astype(np.float32)
+    sc = StreamingConv(jnp.asarray(h))
+    y_stream, state = _stream(sc, x, schedule)
+    assert state.shape == (2, Lh - 1)
+    np.testing.assert_array_equal(np.asarray(state), x[:, -(Lh - 1) :])
+    y_one = np.asarray(fft_conv_os(jnp.asarray(x), jnp.asarray(h)))
+    scale = max(1.0, np.abs(y_one).max())
+    np.testing.assert_allclose(y_stream, y_one, atol=1e-3 * scale)
+
+
+def test_streaming_per_channel_filters(rng):
+    x = rng.standard_normal((2, 3, 500)).astype(np.float32)
+    h = rng.standard_normal((3, 33)).astype(np.float32)
+    sc = StreamingConv(jnp.asarray(h), block=128)
+    y_stream, _ = _stream(sc, x, [200, 300])
+    ref = toeplitz_conv_ref(x, h[None])
+    np.testing.assert_allclose(y_stream, ref, atol=2e-3)
+
+
+def test_streaming_one_tap_filter(rng):
+    # Lh = 1: zero-width state, pure gain — the degenerate edge.
+    x = rng.standard_normal((2, 100)).astype(np.float32)
+    sc = StreamingConv(jnp.asarray(np.array([2.0], np.float32)))
+    y, state = _stream(sc, x, [60, 40])
+    assert state.shape == (2, 0)
+    np.testing.assert_allclose(y, 2.0 * x, atol=1e-5)
+
+
+def test_streaming_rejects_bad_state(rng):
+    sc = StreamingConv(jnp.asarray(rng.standard_normal((17,)), jnp.float32))
+    with pytest.raises(ValueError):
+        sc(jnp.zeros((2, 8)), jnp.zeros((2, 3)))
