@@ -11,12 +11,19 @@ Emits ``name,...`` CSV rows (paper-table stand-ins documented per module).
 
 import sys
 
-from benchmarks import bench_fftconv, bench_roofline, bench_sar, bench_table1
+from benchmarks import (
+    bench_fftconv,
+    bench_roofline,
+    bench_sar,
+    bench_table1,
+    bench_tuning,
+)
 
 SUITES = {
     "table1": bench_table1.main,     # paper Table 1 / Figs 7-10
     "sar": bench_sar.main,           # paper §3 SAR motivation
     "fftconv": bench_fftconv.main,   # LM integration (spectral layers)
+    "tuning": bench_tuning.main,     # autotuned vs fixed-heuristic blocks
     "roofline": bench_roofline.main, # dry-run roofline summary
 }
 
@@ -26,6 +33,8 @@ SMOKE_SUITES = {
     "sar": lambda: bench_sar.main(smoke=True),
     # cross-checks overlap-save against one-shot, so CI exercises the engine
     "fftconv": lambda: bench_fftconv.main(smoke=True),
+    # runs the tuner (model + measure) and asserts cache determinism
+    "tuning": lambda: bench_tuning.main(smoke=True),
 }
 
 

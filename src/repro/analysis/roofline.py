@@ -31,7 +31,9 @@ __all__ = [
     "model_flops",
     "summarize_cell",
     "fft_pass_report",
+    "fft2_fallback_report",
     "conv_report",
+    "prune_candidates",
 ]
 
 
@@ -187,6 +189,63 @@ def fft_pass_report(
     if n2 is not None:
         report["n2"] = n2
     return report
+
+
+def prune_candidates(candidates: list, tol: float = 0.2, vmem_budget: Optional[int] = None) -> list:
+    """Roofline pruning of a tuning space — the model half of the autotuner.
+
+    ``candidates``: ordered ``(config, modeled_hbm_bytes, vmem_bytes)``
+    triples, the fixed heuristic FIRST.  Keeps candidates whose working set
+    fits the VMEM budget and whose modeled HBM traffic is within ``tol`` of
+    the feasible minimum — the only ones a measurement pass could ever
+    crown — returned sorted by modeled bytes (stable, so the heuristic
+    wins modeled ties; where the model is strictly cheaper, the modeled
+    pick deviates from the heuristic by design).
+    """
+    from repro.core.limits import VMEM_BUDGET  # local: analysis stays lazy
+
+    budget = VMEM_BUDGET if vmem_budget is None else vmem_budget
+    feasible = [c for c in candidates if c[2] <= budget]
+    if not feasible:
+        feasible = candidates  # degenerate: nothing fits, measure anyway
+    floor = min(c[1] for c in feasible)
+    kept = [c for c in feasible if c[1] <= floor * (1.0 + tol)]
+    return sorted(kept, key=lambda c: c[1])
+
+
+def fft2_fallback_report(n: int, n2: int, batch: int = 1, hw: HW = V5E) -> dict:
+    """Joint strip-mined 2-D program vs the per-axis composition it replaced.
+
+    For ``n2 > FUSED_MAX`` images the pre-tuner code composed a row plan
+    with an ``axis=-2`` column plan; a multi-pass column plan executes
+    through a transpose sandwich — two extra whole-image HBM round trips
+    the joint program's width-broadcast strided passes do not pay.  Both
+    schedules' modeled bytes, so the acceptance criterion (joint strictly
+    below fallback) is observable, not just asserted.
+    """
+    from repro.core import plan as plan_lib  # local: analysis stays lazy
+
+    f32 = 4
+    joint_plan = plan_lib.plan_fft2(n, n2)
+    joint = plan_lib.program_hbm_bytes(joint_plan.passes, batch, (n2, n))
+    row = plan_lib.program_hbm_bytes(plan_lib.plan_fft(n).passes, batch * n2)
+    col_passes = plan_lib.plan_fft(n2).passes
+    col = plan_lib.program_hbm_bytes(col_passes, batch * n)
+    img = batch * n2 * n * 2 * f32  # split-complex image
+    transposes = 2 * 2 * img if len(col_passes) > 1 else 0  # swapaxes sandwich
+    fallback = row + col + transposes
+    return {
+        "n": n,
+        "n2": n2,
+        "batch": batch,
+        "joint_hbm_bytes": joint,
+        "joint_passes": len(joint_plan.passes),
+        "fallback_hbm_bytes": fallback,
+        "fallback_transpose_bytes": transposes,
+        "bytes_ratio": fallback / joint if joint else float("inf"),
+        "joint_memory_s": joint / hw.hbm_bw,
+        "fallback_memory_s": fallback / hw.hbm_bw,
+    }
 
 
 def _rfft_conv_bytes(n: int, batch: int, plan_lib) -> int:

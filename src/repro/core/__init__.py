@@ -9,9 +9,21 @@ Layers:
   conv         FFT-based long convolution (LM integration point)
   overlap      overlap-save streaming convolution (blocks through small plans)
   distributed  pencil FFT over mesh axes (pod-scale all-to-all schedule)
+  limits       the regime thresholds (single source: DIRECT/FUSED_MAX, ...)
+  tuning       roofline-seeded autotuner (measured configs, persistent cache)
 """
 
-from repro.core import conv, distributed, fft, fft_xla, overlap, plan, twiddle
+from repro.core import (
+    conv,
+    distributed,
+    fft,
+    fft_xla,
+    limits,
+    overlap,
+    plan,
+    tuning,
+    twiddle,
+)
 from repro.core.conv import fft_conv
 from repro.core.overlap import StreamingConv, fft_conv_os
 from repro.core.fft import (
@@ -38,8 +50,10 @@ __all__ = [
     "distributed",
     "fft",
     "fft_xla",
+    "limits",
     "overlap",
     "plan",
+    "tuning",
     "twiddle",
     "fft_conv",
     "fft_conv_os",

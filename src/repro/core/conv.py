@@ -25,6 +25,7 @@ import numpy as np
 from repro.core import fft as fft_lib
 from repro.core import plan as plan_lib
 from repro.core.fft_xla import cmul
+from repro.core.limits import next_pow2
 
 __all__ = [
     "fft_conv",
@@ -35,10 +36,6 @@ __all__ = [
 ]
 
 
-def next_pow2(n: int) -> int:
-    return 1 << (n - 1).bit_length()
-
-
 def fft_conv(
     x: jax.Array,
     h: jax.Array,
@@ -47,6 +44,7 @@ def fft_conv(
     axis: int = -1,
     backend: str | None = None,
     overlap_save: bool | None = None,
+    tune: str | None = None,
 ) -> jax.Array:
     """Causal convolution of ``x`` with filter ``h`` along ``axis``.
 
@@ -62,6 +60,8 @@ def fft_conv(
     (``next_pow2(L + Lh - 1) > FUSED_MAX``) — long signals then run as many
     fused-regime block transforms instead of one split-regime program.
     ``True`` forces the overlap-save path, ``False`` forces one-shot.
+    ``tune`` controls the overlap-save block autotuner
+    (:mod:`repro.core.tuning`): off/model/measure, default model.
 
     ``h`` is indexed over its *last* axis and broadcasts against ``x`` with
     the convolution axis moved last (e.g. per-channel filters of shape
@@ -77,7 +77,7 @@ def fft_conv(
         from repro.core import overlap  # lazy: conv loads before overlap at package init
 
         return overlap.fft_conv_os(
-            x, h, causal=causal, axis=axis, backend=backend
+            x, h, causal=causal, axis=axis, backend=backend, tune=tune
         )
     out_dtype = x.dtype
     x = x.astype(jnp.float32)

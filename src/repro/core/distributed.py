@@ -315,6 +315,7 @@ def pconv_os_sharded(
     causal: bool = True,
     block: int | None = None,
     backend: str | None = None,
+    tune: str | None = None,
 ) -> jax.Array:
     """Distributed overlap-save convolution: blocks sharded over ``mesh[axis]``.
 
@@ -331,8 +332,17 @@ def pconv_os_sharded(
     Returns the (..., L) causal output (or L + Lh − 1 with
     ``causal=False``), replicated — the framing gather and tail scatter run
     outside the ``shard_map`` body.
+
+    Block tuning here is DETERMINISTIC by construction: with ``block=None``
+    and ``tune`` ≠ "off" the block is the pure roofline pick
+    (:func:`repro.core.tuning.modeled_block`) — never a cache hit or a
+    measurement, which could differ across the hosts of a multi-process
+    mesh and desynchronize the shard_map program.  To use a measured
+    winner, tune on one host (``tuning.tuned_block(..., "measure")``) and
+    pass the result as ``block=`` explicitly.
     """
     from repro.core import overlap as ov  # lazy: distributed loads before overlap at package init
+    from repro.core import tuning
 
     x = jnp.asarray(x)
     out_dtype = x.dtype
@@ -340,7 +350,13 @@ def pconv_os_sharded(
     h = jnp.asarray(h, jnp.float32)
     d = mesh.shape[axis]
     L, Lh = x.shape[-1], h.shape[-1]
-    B = ov.pick_block(Lh, block)
+    batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+    if block is not None:
+        B = ov.pick_block(Lh, block)
+    elif tuning.resolve_mode(tune) == "off" or Lh < 2:
+        B = ov.pick_block(Lh)
+    else:
+        B = tuning.modeled_block(L, Lh, batch, backend)
     overlap = Lh - 1
     step = B - overlap
     L_out = L if causal else L + Lh - 1

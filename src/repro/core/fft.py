@@ -43,6 +43,7 @@ tuple of float32 planes, and return whichever form was supplied.
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import functools
@@ -75,6 +76,8 @@ __all__ = [
     "use_backend",
     "default_backend",
     "plan_log",
+    "clear_plan_log",
+    "PLAN_LOG_MAX",
     "fft",
     "ifft",
     "rfft",
@@ -419,6 +422,29 @@ def _pick_tiles(fft_plan: plan_lib.FFTPlan, batch_hint: Optional[int]) -> tuple:
     return tuple(tiles)
 
 
+def _tuned_tiles(
+    fft_plan: plan_lib.FFTPlan, batch_hint: Optional[int], cfg: Optional[dict]
+) -> tuple:
+    """The heuristic tiles of :func:`_pick_tiles`, scaled per leaf by a
+    tuned plan config.
+
+    The tuner's tile is relative to the *hint-free* heuristic (it cannot
+    know per-call batch hints), so it is applied as a scale on top of the
+    hint-capped default — a tuned halving halves the capped tile too, and
+    the modeled (no-op) pick leaves the hint behavior untouched."""
+    tiles = dict(_pick_tiles(fft_plan, batch_hint))
+    if cfg:
+        for leaf_n, bt in cfg.get("batch_tiles", {}).items():
+            n = int(leaf_n)
+            if n not in tiles:
+                continue
+            base = plan_lib.pick_batch_tile(fft_plan.leaf_pass(n))
+            while base > int(bt) and tiles[n] > 1:
+                base //= 2
+                tiles[n] = max(1, tiles[n] // 2)
+    return tuple(tiles.items())
+
+
 class PlannedFFT:
     """A frozen, executable transform schedule (the cuFFT/FFTW plan handle).
 
@@ -448,6 +474,7 @@ class PlannedFFT:
         luts: tuple = (),
         batch_tiles: tuple = (),
         epilogue: Optional[plan_lib.Pass] = None,
+        tuned: Optional[dict] = None,
     ):
         self.spec = spec
         self.backend = backend
@@ -456,6 +483,16 @@ class PlannedFFT:
         self.luts = luts
         self.epilogue = epilogue
         self._batch_tiles = dict(batch_tiles)
+        #: The tuning config this plan was built from (None = fixed
+        #: heuristics) — see :mod:`repro.core.tuning`.
+        self.tuned = tuned
+        #: pass index → tuned grid-step chunk, consumed by the pallas
+        #: executor; empty when untuned (heuristic chunks per pass).
+        self.pass_chunks: Mapping[int, int] = (
+            {int(k): int(v) for k, v in tuned.get("chunks", {}).items()}
+            if tuned
+            else {}
+        )
 
     # -- identity ----------------------------------------------------------
 
@@ -511,13 +548,28 @@ class PlannedFFT:
         size = f"N={spec.n2}x{spec.n}" if spec.n2 is not None else f"N={spec.n}"
         head = f"{spec.kind} {size} backend={self.backend.name}: "
         if self.fft_plan is not None:
-            return head + plan_lib.describe_program(self.fft_plan)
+            return head + plan_lib.describe_program(self.fft_plan) + self._describe_tuned()
         parts = [plan_lib.describe_program(c.fft_plan) for c in self.children
                  if c.fft_plan is not None]
         s = head + " | ".join(parts)
         if self.epilogue is not None:
             s += f"; epilogue pass: {self.epilogue.kind} n={self.epilogue.n}"
         return s
+
+    def _describe_tuned(self) -> str:
+        """The tuned choices per pass, appended to :meth:`describe` so the
+        searched decisions are visible next to the schedule they shape."""
+        if not self.tuned:
+            return ""
+        parts = [
+            f"fused_max={self.tuned['fused_max']}",
+            f"direct_max={self.tuned.get('direct_max', plan_lib.DIRECT_MAX)}",
+        ]
+        for i, c in sorted(self.pass_chunks.items()):
+            parts.append(f"pass {i} chunk={c}")
+        for n, bt in sorted(self._batch_tiles.items()):
+            parts.append(f"leaf {n} tile={bt}")
+        return "; tuned: " + ", ".join(parts)
 
     # -- execution ---------------------------------------------------------
 
@@ -640,7 +692,8 @@ class PlannedFFT:
             return self._row_col_plans()[0].apply_planes(xr, xi)
         from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
 
-        row_passes = tuple(p for p in self.fft_plan.passes if p.axis == -1)
+        row_idx = [i for i, p in enumerate(self.fft_plan.passes) if p.axis == -1]
+        row_passes = tuple(self.fft_plan.passes[i] for i in row_idx)
         lead, n = xr.shape[:-1], xr.shape[-1]
         b = int(np.prod(lead)) if lead else 1
         yr, yi = kernel_ops.execute_program(
@@ -649,8 +702,19 @@ class PlannedFFT:
             row_passes,
             inverse=inverse,
             batch_tiles=self._batch_tiles,
+            chunks=self._half_chunks(row_idx),
         )
         return yr.reshape(*lead, n), yi.reshape(*lead, n)
+
+    def _half_chunks(self, idx: list) -> Optional[dict]:
+        """Re-index tuned pass chunks onto a program half (the joint
+        program's pass indices renumber when rows/cols run separately)."""
+        chunks = {
+            j: self.pass_chunks[i]
+            for j, i in enumerate(idx)
+            if i in self.pass_chunks
+        }
+        return chunks or None
 
     def apply_cols(self, xr: jax.Array, xi: jax.Array) -> Planes:
         """Run only the column (axis -2) sub-program of a 2-D plan, in place
@@ -662,7 +726,8 @@ class PlannedFFT:
             return self._row_col_plans()[1].apply_planes(xr, xi)
         from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
 
-        col_passes = tuple(p for p in self.fft_plan.passes if p.axis == -2)
+        col_idx = [i for i, p in enumerate(self.fft_plan.passes) if p.axis == -2]
+        col_passes = tuple(self.fft_plan.passes[i] for i in col_idx)
         if not col_passes:
             return xr, xi
         lead, (rows, w) = xr.shape[:-2], xr.shape[-2:]
@@ -675,6 +740,7 @@ class PlannedFFT:
             col_passes,
             inverse=inverse,
             batch_tiles=self._batch_tiles,
+            chunks=self._half_chunks(col_idx),
         )
         return yr.reshape(*lead, rows, w), yi.reshape(*lead, rows, w)
 
@@ -811,40 +877,75 @@ class PlannedFFT:
 # ---------------------------------------------------------------------------
 
 
-def plan(spec: FFTSpec | int, *, backend: Optional[str] = None) -> PlannedFFT:
+def plan(
+    spec: FFTSpec | int,
+    *,
+    backend: Optional[str] = None,
+    tune: Optional[str] = None,
+) -> PlannedFFT:
     """Resolve ``spec`` into an interned :class:`PlannedFFT` executor.
 
     ``backend=None`` uses the innermost :func:`use_backend` scope, the
     ``REPRO_FFT_BACKEND`` env var, or capability negotiation, in that order.
-    Plans are cached: the same (spec, backend, platform) returns the *same*
-    object, so jit tracing of a planned call hits the compilation cache.
+    Plans are cached: the same (spec, backend, platform, tune mode) returns
+    the *same* object, so jit tracing of a planned call hits the
+    compilation cache.
+
+    ``tune`` selects how the plan's performance knobs (fused-vs-split
+    crossover, per-pass chunk widths, leaf batch tiles) are chosen:
+    ``"off"`` keeps the fixed VMEM-budget heuristics, ``"model"`` (the
+    default, also via ``REPRO_FFT_TUNE``) takes the roofline model's pick
+    with zero measurements, and ``"measure"`` times the roofline-pruned
+    survivors once and records the winner in the persistent tuning cache —
+    see :mod:`repro.core.tuning`.
     """
+    from repro.core import tuning  # lazy: tuning imports the conv engines
+
     if isinstance(spec, int):
         spec = FFTSpec(n=spec)
     name = backend if backend is not None else default_backend()
-    return _plan_cached(spec, name, jax.default_backend())
+    return _plan_cached(spec, name, jax.default_backend(), tuning.resolve_mode(tune))
 
+
+#: Ring-buffer capacity of the plan log: long sessions (serving loops that
+#: plan thousands of shapes) keep the most recent schedules instead of
+#: growing without bound.
+PLAN_LOG_MAX = 1024
 
 #: Every (FFTSpec, backend name) materialized by :func:`_plan_cached`, in
-#: creation order.  Cache hits don't re-log, so the tail of the log after a
+#: creation order — a bounded deque of the last :data:`PLAN_LOG_MAX`
+#: entries.  Cache hits don't re-log, so the tail of the log after a
 #: snapshot is exactly the set of *new* schedules an operation forced —
 #: which is how the tests assert overlap-save never plans past FUSED_MAX.
-_PLAN_LOG: list = []
+_PLAN_LOG: collections.deque = collections.deque(maxlen=PLAN_LOG_MAX)
 
 
 def plan_log() -> tuple:
-    """Snapshot of every (spec, backend_name) pair planned this process."""
+    """Snapshot of the most recent (spec, backend_name) pairs planned this
+    process (ring buffer of :data:`PLAN_LOG_MAX`; oldest entries fall off)."""
     return tuple(_PLAN_LOG)
 
 
+def clear_plan_log() -> None:
+    """Empty the plan log (the creation-order record, NOT the plan cache —
+    existing :class:`PlannedFFT` handles stay interned)."""
+    _PLAN_LOG.clear()
+
+
 @functools.lru_cache(maxsize=1024)
-def _plan_cached(spec: FFTSpec, backend_name: Optional[str], platform: str) -> PlannedFFT:
-    planned = _build_plan(spec, backend_name, platform)
+def _plan_cached(
+    spec: FFTSpec, backend_name: Optional[str], platform: str, tune: str = "model"
+) -> PlannedFFT:
+    planned = _build_plan(spec, backend_name, platform, tune)
     _PLAN_LOG.append((spec, planned.backend.name))
     return planned
 
 
-def _build_plan(spec: FFTSpec, backend_name: Optional[str], platform: str) -> PlannedFFT:
+def _build_plan(
+    spec: FFTSpec, backend_name: Optional[str], platform: str, tune: str = "model"
+) -> PlannedFFT:
+    from repro.core import tuning  # lazy: tuning imports the conv engines
+
     if backend_name is None:
         entry = _negotiate(spec, platform)
     else:
@@ -856,26 +957,41 @@ def _build_plan(spec: FFTSpec, backend_name: Optional[str], platform: str) -> Pl
 
     kind = spec.kind
     if kind in _COMPLEX_KINDS:
-        fft_plan = plan_lib.plan_fft(spec.n)
+        cfg = tuning.plan_config(spec, entry.name, tune)
+        fft_plan = plan_lib.plan_fft(
+            spec.n,
+            cfg["fused_max"] if cfg else plan_lib.FUSED_MAX,
+            cfg.get("direct_max", plan_lib.DIRECT_MAX) if cfg else plan_lib.DIRECT_MAX,
+        )
         return PlannedFFT(
             spec,
             entry,
             fft_plan,
             luts=_materialize_luts(fft_plan, kind == "ifft", entry.name),
-            batch_tiles=_pick_tiles(fft_plan, spec.batch_hint),
+            batch_tiles=_tuned_tiles(fft_plan, spec.batch_hint, cfg),
+            tuned=cfg,
         )
 
-    if kind in ("fft2", "ifft2") and spec.n2 <= plan_lib.FUSED_MAX:
-        # ONE joint multi-axis program: row passes over the last axis, then
-        # the in-place strided-column pass over n2 — no per-axis child plans
-        # and no transposes between the axes (compile_passes2d).
-        fft_plan = plan_lib.plan_fft2(spec.n, spec.n2)
+    if kind in ("fft2", "ifft2") and plan_lib.joint2d_supported(spec.n2):
+        # ONE joint multi-axis program: row passes over the last axis,
+        # then the column passes over n2 — in-place for fused-regime
+        # columns, strip-mined (width-swept multi-factor strided passes)
+        # beyond — no per-axis child plans and no transposes between the
+        # axes (compile_passes2d).
+        cfg = tuning.plan_config(spec, entry.name, tune)
+        fft_plan = plan_lib.plan_fft2(
+            spec.n,
+            spec.n2,
+            cfg["fused_max"] if cfg else plan_lib.FUSED_MAX,
+            cfg.get("direct_max", plan_lib.DIRECT_MAX) if cfg else plan_lib.DIRECT_MAX,
+        )
         return PlannedFFT(
             spec,
             entry,
             fft_plan,
             luts=_materialize_luts(fft_plan, kind == "ifft2", entry.name),
-            batch_tiles=_pick_tiles(fft_plan, None),
+            batch_tiles=_tuned_tiles(fft_plan, None, cfg),
+            tuned=cfg,
         )
 
     def child(n: int, inverse: bool, batch_hint: Optional[int], axis: int = -1) -> PlannedFFT:
@@ -889,14 +1005,12 @@ def _build_plan(spec: FFTSpec, backend_name: Optional[str], platform: str) -> Pl
             ),
             entry.name,
             platform,
+            tune,
         )
 
     if kind in ("fft2", "ifft2"):
-        # Column length beyond the fused regime: no joint program yet
-        # (compile_passes2d would need strided multi-factor column passes),
-        # so the handle composes the row plan and the axis=-2 column plan —
-        # the pre-joint-program behavior, kept working for tall images and
-        # the distributed pencil driver's large-n1 shards.
+        # Column length beyond even the strip-mined gate (> FUSED_MAX²):
+        # the handle composes the row plan and the axis=-2 column plan.
         inverse2 = kind == "ifft2"
         rows = child(spec.n, inverse2, None)
         cols = child(spec.n2, inverse2, None, axis=-2)
@@ -976,6 +1090,7 @@ def _pallas_backend(xr, xi, *, inverse, planned, axis=-1):
         inverse=inverse,
         batch_tiles=planned.batch_tiles,
         axis=axis,
+        chunks=planned.pass_chunks or None,
     )
 
 

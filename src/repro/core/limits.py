@@ -1,0 +1,49 @@
+"""Memory-hierarchy regime limits — the single source every layer consumes.
+
+The paper's schedule is parameterized by where each transform regime ends
+(§2.3.2: one kernel call while the working set fits the fast tier, two
+beyond, ...).  These thresholds used to be scattered as per-module constants
+(`plan.FUSED_MAX`, `overlap.OS_FACTOR`, ad-hoc VMEM budgets); they live here
+so the planner, the overlap-save engine, the conv router and the autotuner
+all agree on one regime map — and so the tuner (:mod:`repro.core.tuning`)
+has one place to read the *fixed heuristics* it replaces with searched
+decisions.
+
+``tests/test_limits.py`` grep-asserts this file is the only assignment site
+of each constant.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "DIRECT_MAX",
+    "FUSED_MAX",
+    "OS_FACTOR",
+    "VMEM_BUDGET",
+    "next_pow2",
+]
+
+#: Largest N executed as a single direct DFT matmul (one (B,N)x(N,N) GEMM).
+DIRECT_MAX = 1024
+
+#: Largest N executed by the fused four-step kernel in one HBM round trip.
+#: 65536 = 256·256 keeps the per-block working set (signal tile + two DFT
+#: matrices + twiddle grid + scratch) under ~6 MB of VMEM — see
+#: :func:`repro.core.plan.vmem_bytes`.
+FUSED_MAX = 65536
+
+#: Default overlap-save block multiplier: B = next_pow2(Lh) · OS_FACTOR.
+#: 8 keeps the valid fraction per block at (B − Lh + 1)/B ≥ 7/8 — under 15%
+#: redundant transform work — while staying inside the fused regime for the
+#: 4k-tap filters of the Hyena/SAR workloads (8192 · 8 = 65536 = FUSED_MAX).
+#: This is the fixed heuristic ``tune="measure"`` searches past.
+OS_FACTOR = 8
+
+#: Per-grid-step VMEM working-set budget: half of the ~16 MB per core,
+#: leaving room for Mosaic's double buffering.  Binds the batch-tile and
+#: pass-chunk picks (and the tuner's candidate feasibility check).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()

@@ -45,8 +45,7 @@ import numpy as np
 from repro.core import fft as fft_lib
 from repro.core import plan as plan_lib
 from repro.core.fft_xla import cmul
-
-from repro.core.conv import next_pow2
+from repro.core.limits import OS_FACTOR, next_pow2
 
 Planes = Tuple[jax.Array, jax.Array]
 
@@ -60,15 +59,14 @@ __all__ = [
     "StreamingConv",
 ]
 
-#: Default block size multiplier: B = next_pow2(Lh) · OS_FACTOR.  8 keeps the
-#: valid fraction per block at (B − Lh + 1)/B ≥ 7/8 — under 15% redundant
-#: transform work — while staying well inside the fused regime for the 4k-tap
-#: filters of the Hyena/SAR workloads (8192 · 8 = 65536 = FUSED_MAX).
-OS_FACTOR = 8
+# OS_FACTOR (the fixed block-size heuristic the autotuner searches past)
+# lives in repro.core.limits with the other regime thresholds; re-exported
+# here because this engine is where callers historically imported it from.
 
 
 def pick_block(filter_len: int, block: Optional[int] = None) -> int:
-    """Overlap-save block size for a ``filter_len``-tap filter.
+    """FIXED-heuristic overlap-save block size for a ``filter_len``-tap
+    filter (the tuner's baseline; :func:`_resolve_block` searches past it).
 
     Default: ``next_pow2(filter_len) · OS_FACTOR``, capped at
     :data:`~repro.core.plan.FUSED_MAX` so no planned transform leaves the
@@ -91,6 +89,29 @@ def pick_block(filter_len: int, block: Optional[int] = None) -> int:
             )
         return block
     return max(min(p * OS_FACTOR, plan_lib.FUSED_MAX), 2 * p, 2)
+
+
+def _resolve_block(
+    filter_len: int,
+    block: Optional[int],
+    L: int,
+    batch: int,
+    backend: Optional[str],
+    tune: Optional[str],
+) -> int:
+    """The block an overlap-save call actually uses: an explicit ``block``
+    is validated and wins; otherwise the autotuner decides (``tune="off"``
+    → the fixed ``OS_FACTOR`` heuristic, ``"model"`` → the roofline
+    modeled minimum, ``"measure"`` → the measured winner from the
+    persistent cache — see :mod:`repro.core.tuning`)."""
+    if block is not None:
+        return pick_block(filter_len, block)
+    from repro.core import tuning  # lazy: tuning measures through this module
+
+    mode = tuning.resolve_mode(tune)
+    if mode == "off" or filter_len < 2:
+        return pick_block(filter_len)
+    return tuning.tuned_block(L, filter_len, batch, backend, mode)
 
 
 def frame_signal(
@@ -166,6 +187,7 @@ def fft_conv_os(
     axis: int = -1,
     block: Optional[int] = None,
     backend: Optional[str] = None,
+    tune: Optional[str] = None,
 ) -> jax.Array:
     """Overlap-save convolution of ``x`` with filter ``h`` along ``axis``.
 
@@ -175,6 +197,12 @@ def fft_conv_os(
     through one cached rfft/irfft plan pair, and the valid tails are
     scattered back.  ``h`` broadcasts against ``x`` with the convolution
     axis moved last, exactly like ``fft_conv``.
+
+    With ``block=None`` the block size is a tuned decision
+    (:mod:`repro.core.tuning`): ``tune="off"`` keeps the fixed
+    ``OS_FACTOR`` heuristic, ``"model"`` (default) takes the roofline
+    modeled minimum, ``"measure"`` times the pruned candidates once per
+    ``(device, backend, L, Lh, batch)`` and reuses the persisted winner.
     """
     x = jnp.asarray(x)
     out_dtype = x.dtype
@@ -183,7 +211,8 @@ def fft_conv_os(
     if axis != -1:
         x = jnp.moveaxis(x, axis, -1)
     L, Lh = x.shape[-1], h.shape[-1]
-    B = pick_block(Lh, block)
+    batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+    B = _resolve_block(Lh, block, L, batch, backend, tune)
     overlap = Lh - 1
     step = B - overlap
     L_out = L if causal else L + Lh - 1
@@ -217,6 +246,12 @@ class StreamingConv:
     Every chunk reuses the same cached block-plan pair (the block size is
     fixed by the filter at construction) AND the filter spectrum computed
     here once — per-chunk work is the chunk's own frames only.
+
+    With ``block=None`` the block is tuned like :func:`fft_conv_os`'s
+    (``tune=`` modes, persistent cache); ``chunk_hint`` is the expected
+    per-call chunk length the measurement pass times against (chunks are
+    not known at construction — defaults to a long-ingest stand-in of 8
+    heuristic blocks).
     """
 
     def __init__(
@@ -225,11 +260,16 @@ class StreamingConv:
         *,
         block: Optional[int] = None,
         backend: Optional[str] = None,
+        tune: Optional[str] = None,
+        chunk_hint: Optional[int] = None,
     ):
         self.h = jnp.asarray(h, jnp.float32)
         self.filter_len = int(self.h.shape[-1])
         self.overlap = self.filter_len - 1
-        self.block = pick_block(self.filter_len, block)
+        L_tune = chunk_hint or 8 * pick_block(self.filter_len)
+        self.block = _resolve_block(
+            self.filter_len, block, L_tune, 1, backend, tune
+        )
         self.backend = backend
         self._Hr, self._Hi = filter_spectrum(self.h, self.block, backend)
 

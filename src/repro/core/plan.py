@@ -44,15 +44,19 @@ import dataclasses
 import functools
 import math
 
+from repro.core.limits import DIRECT_MAX, FUSED_MAX, VMEM_BUDGET
+
 __all__ = [
     "DIRECT_MAX",
     "FUSED_MAX",
+    "VMEM_BUDGET",
     "FFTPlan",
     "Pass",
     "plan_fft",
     "plan_fft2",
     "compile_passes",
     "compile_passes2d",
+    "joint2d_supported",
     "program_factors",
     "balanced_split",
     "vmem_bytes",
@@ -64,13 +68,9 @@ __all__ = [
     "describe_program",
 ]
 
-#: Largest N executed as a single direct DFT matmul (one (B,N)x(N,N) GEMM).
-DIRECT_MAX = 1024
-
-#: Largest N executed by the fused four-step kernel in one HBM round trip.
-#: 65536 = 256·256 keeps the per-block working set (signal tile + two DFT
-#: matrices + twiddle grid + scratch) under ~6 MB of VMEM — see vmem_bytes().
-FUSED_MAX = 65536
+# DIRECT_MAX / FUSED_MAX / VMEM_BUDGET are defined in repro.core.limits (the
+# single source for every regime threshold) and re-exported here because the
+# planner is where the rest of the codebase historically imported them from.
 
 
 def _is_pow2(n: int) -> bool:
@@ -184,8 +184,14 @@ class FFTPlan:
         raise KeyError(f"length {m} is not a leaf of the plan for n={self.n}")
 
 
-def _leaf_pass(n: int) -> Pass:
-    if n <= DIRECT_MAX:
+def _leaf_pass(n: int, direct_max: int = DIRECT_MAX) -> Pass:
+    """The leaf engine decision: a direct DFT matmul up to ``direct_max``
+    (one GEMM, but an n² LUT), the fused four-step beyond (two √n-sized
+    GEMMs + twiddle).  ``direct_max`` is the tuner's engine knob — lowering
+    it trades the big DFT matrix stream for four-step arithmetic on leaves
+    near the boundary.  Lengths below 8 stay direct (a four-step split
+    would degenerate)."""
+    if n <= max(direct_max, 8):
         return Pass(kind="direct", n=n)
     n1, n2 = balanced_split(n)
     return Pass(kind="fused4", n=n, n1=n1, n2=n2)
@@ -213,7 +219,10 @@ def program_factors(n: int, fused_max: int = FUSED_MAX) -> tuple[int, ...]:
 
 @functools.lru_cache(maxsize=512)
 def compile_passes(
-    n: int, fused_max: int = FUSED_MAX, order: str = "natural"
+    n: int,
+    fused_max: int = FUSED_MAX,
+    order: str = "natural",
+    direct_max: int = DIRECT_MAX,
 ) -> tuple[Pass, ...]:
     """Compile the ordered pass program for a length-``n`` transform.
 
@@ -233,7 +242,7 @@ def compile_passes(
     stride = n
     for i, f in enumerate(fs):
         stride //= f
-        leaf = _leaf_pass(f)
+        leaf = _leaf_pass(f, direct_max)
         view_in = (n // f, stride, f)
         view_out = view_in
         pass_order = "pencil"
@@ -268,52 +277,77 @@ def compile_passes(
     return tuple(passes)
 
 
+def joint2d_supported(n2: int, fused_max: int = FUSED_MAX) -> bool:
+    """Whether an ``(..., n2, n)`` image compiles into ONE joint program:
+    fused-regime columns, or strip-mined columns of at most two factors
+    (``n2 ≤ fused_max²``).  Beyond that the column program would need a
+    digit-reversal relayout down axis -2 and ``fft.plan()`` composes
+    per-axis plans instead.  The explicit form of the
+    :func:`compile_passes2d` gate, so callers can branch without catching
+    its ``NotImplementedError``."""
+    return _is_pow2(n2) and (
+        n2 <= fused_max or len(program_factors(n2, fused_max)) <= 2
+    )
+
+
 @functools.lru_cache(maxsize=256)
 def compile_passes2d(
-    n: int, n2: int, fused_max: int = FUSED_MAX
+    n: int, n2: int, fused_max: int = FUSED_MAX, direct_max: int = DIRECT_MAX
 ) -> tuple[Pass, ...]:
     """Compile the joint pass program of an ``(..., n2, n)`` 2-D transform.
 
     Row passes first — the 1-D program of the last axis, executed over
-    ``batch × n2`` contiguous rows — then one in-place strided-column pass
-    down axis -2: the whole image is the pencil view ``(b, n2, n)`` and the
+    ``batch × n2`` contiguous rows — then the column passes down axis -2.
+    Fused-regime columns (``n2 ≤ fused_max``) are one in-place strided
+    column pass: the whole image is the pencil view ``(b, n2, n)`` and the
     column kernel transforms its middle axis, so the row→column handoff
     never materialises an HBM transpose (the §2.3.2 discipline extended to
-    the paper's image workload).  Column lengths beyond the fused regime
-    would need strided multi-factor column passes with width-broadcast
-    twiddles — out of scope until a workload needs >65536-row images.
+    the paper's image workload).
+
+    Beyond the fused regime the columns are **strip-mined**: the 1-D split
+    program of ``n2`` re-tagged ``axis=-2`` — strided multi-factor column
+    passes whose pencil views decompose the n2 axis exactly like the 1-D
+    flat buffer, with the image width riding along as extra pencil columns
+    (swept chunk-by-chunk) and the inter-factor twiddle broadcast across
+    the width inside the kernel.  Taller-than-``fused_max²`` images would
+    additionally need a digit-reversal relayout down axis -2 and stay
+    gated.
     """
     if not _is_pow2(n2):
         raise ValueError(f"FFT length must be a power of two, got {n2}")
-    if n2 > fused_max:
-        raise NotImplementedError(
-            f"joint 2-D programs need the column length in the fused regime "
-            f"(n2={n2} > {fused_max}): beyond it the columns would need "
-            f"strided multi-factor passes with width-broadcast twiddles.  "
-            f"fft.plan(FFTSpec(kind='fft2')) composes per-axis plans instead "
-            f"for such images; orienting the long axis last keeps the joint "
-            f"program."
-        )
-    passes = list(compile_passes(n, fused_max, "natural"))
-    if n2 > 1:
-        leaf = _leaf_pass(n2)
-        passes.append(
-            Pass(
-                kind=leaf.kind,
-                n=n2,
-                n1=leaf.n1,
-                n2=leaf.n2,
-                view_in=(1, 1, n2),
-                view_out=(1, 1, n2),
-                order="natural",
-                axis=-2,
+    passes = list(compile_passes(n, fused_max, "natural", direct_max))
+    if n2 <= fused_max:
+        if n2 > 1:
+            leaf = _leaf_pass(n2, direct_max)
+            passes.append(
+                Pass(
+                    kind=leaf.kind,
+                    n=n2,
+                    n1=leaf.n1,
+                    n2=leaf.n2,
+                    view_in=(1, 1, n2),
+                    view_out=(1, 1, n2),
+                    order="natural",
+                    axis=-2,
+                )
             )
+        return tuple(passes)
+    col_passes = compile_passes(n2, fused_max, "natural", direct_max)
+    if any(p.kind == "reorder" for p in col_passes):
+        raise NotImplementedError(
+            f"strip-mined column programs cover n2 ≤ fused_max² "
+            f"({fused_max**2}); n2={n2} would need a digit-reversal "
+            f"relayout pass down axis -2.  fft.plan(FFTSpec(kind='fft2')) "
+            f"composes per-axis plans instead for such images."
         )
+    passes.extend(dataclasses.replace(p, axis=-2) for p in col_passes)
     return tuple(passes)
 
 
 @functools.lru_cache(maxsize=512)
-def plan_fft(n: int, fused_max: int = FUSED_MAX) -> FFTPlan:
+def plan_fft(
+    n: int, fused_max: int = FUSED_MAX, direct_max: int = DIRECT_MAX
+) -> FFTPlan:
     """Plan a length-``n`` power-of-two complex FFT."""
     if not _is_pow2(n):
         raise ValueError(f"FFT length must be a power of two, got {n}")
@@ -335,17 +369,21 @@ def plan_fft(n: int, fused_max: int = FUSED_MAX) -> FFTPlan:
             leaf_lengths.add(levels[i][1])
     else:
         leaf_lengths = {n}
-    leaves = tuple(sorted((_leaf_pass(m) for m in leaf_lengths), key=lambda p: p.n))
+    leaves = tuple(
+        sorted((_leaf_pass(m, direct_max) for m in leaf_lengths), key=lambda p: p.n)
+    )
     return FFTPlan(
         n=n,
         levels=tuple(levels),
         leaf_passes=leaves,
-        passes=compile_passes(n, fused_max, "natural"),
+        passes=compile_passes(n, fused_max, "natural", direct_max),
     )
 
 
 @functools.lru_cache(maxsize=256)
-def plan_fft2(n: int, n2: int, fused_max: int = FUSED_MAX) -> FFTPlan:
+def plan_fft2(
+    n: int, n2: int, fused_max: int = FUSED_MAX, direct_max: int = DIRECT_MAX
+) -> FFTPlan:
     """Plan an ``(..., n2, n)`` 2-D complex FFT as ONE linearized program.
 
     ``n`` is the last-axis (row) length, ``n2`` the second-to-last (column)
@@ -353,16 +391,19 @@ def plan_fft2(n: int, n2: int, fused_max: int = FUSED_MAX) -> FFTPlan:
     the in-place ``axis=-2`` column pass — a single compiled schedule, no
     per-axis child plans and no transposes between the axes.
     """
-    row_plan = plan_fft(n, fused_max)
+    row_plan = plan_fft(n, fused_max, direct_max)
     leaf_lengths = {p.n for p in row_plan.leaf_passes}
     if n2 > 1:
-        leaf_lengths.add(n2)
-    leaves = tuple(sorted((_leaf_pass(m) for m in leaf_lengths), key=lambda p: p.n))
+        # Strip-mined columns contribute one leaf per column factor.
+        leaf_lengths.update(program_factors(n2, fused_max))
+    leaves = tuple(
+        sorted((_leaf_pass(m, direct_max) for m in leaf_lengths), key=lambda p: p.n)
+    )
     return FFTPlan(
         n=n,
         levels=row_plan.levels,
         leaf_passes=leaves,
-        passes=compile_passes2d(n, n2, fused_max),
+        passes=compile_passes2d(n, n2, fused_max, direct_max),
         n2=n2,
     )
 
@@ -386,7 +427,7 @@ def vmem_bytes(p: Pass, batch_tile: int) -> int:
     return 3 * sig + mats + tw                    # in, intermediate, out
 
 
-def pick_batch_tile(p: Pass, budget: int = 8 * 1024 * 1024) -> int:
+def pick_batch_tile(p: Pass, budget: int = VMEM_BUDGET) -> int:
     """Largest power-of-two batch tile whose working set fits the budget."""
     bt = 512
     while bt > 1 and vmem_bytes(p, bt) > budget:
@@ -459,7 +500,7 @@ def _pass_chunk_bytes(p: Pass, c: int) -> int:
 
 
 def pick_pass_chunk(
-    p: Pass, budget: int = 8 * 1024 * 1024, width: int | None = None
+    p: Pass, budget: int = VMEM_BUDGET, width: int | None = None
 ) -> int:
     """Per-grid-step chunk (columns for strided passes, rows for contiguous
     ones) — largest power of two fitting the VMEM budget.
@@ -500,7 +541,12 @@ def describe_program(p: FFTPlan, batch: int = 1) -> str:
             if ps.kind == "direct"
             else f"fused four-step n={f} ({ps.n1} x {ps.n2})"
         )
-        if ps.axis == -2:
+        if ps.axis == -2 and pencils > 1:
+            layout = (
+                f"axis -2 strip-mined cols {pencils}x{f} stride={stride} "
+                f"(width {p.n})"
+            )
+        elif ps.axis == -2:
             layout = f"axis -2 in-place columns (width {p.n})"
         elif pencils == 1:
             layout = "whole-signal"

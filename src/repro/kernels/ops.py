@@ -144,9 +144,10 @@ def _leaf_kernel(
 
 
 def _apply_pass(
-    xr, xi, p: plan_lib.Pass, fs, inverse, interpret, batch_tiles
+    xr, xi, p: plan_lib.Pass, fs, inverse, interpret, batch_tiles, chunk=None
 ) -> Planes:
-    """One row-axis program pass over (B, n) split planes."""
+    """One row-axis program pass over (B, n) split planes.  ``chunk``
+    overrides the VMEM-heuristic grid-step width (the tuner's hook)."""
     b, n = xr.shape
     if p.kind == "reorder":
         # Digit-reversal relayout — only programs with ≥ 3 factors
@@ -163,7 +164,8 @@ def _apply_pass(
             natural_order=p.order == "natural",
         )
     luts = _transform_luts(p, inverse)
-    chunk = plan_lib.pick_pass_chunk(p)
+    width = stride if stride > 1 else pencils
+    chunk = _fit_chunk(chunk, width, p) if chunk else plan_lib.pick_pass_chunk(p)
     if stride == 1:
         if p.view_out != p.view_in:
             # Row pass with the natural-order transpose fused into its
@@ -206,22 +208,80 @@ def image_chunk(p: plan_lib.Pass, w: int) -> int:
     return chunk
 
 
-def _cols_image_pass(xr, xi, p: plan_lib.Pass, inverse, interpret) -> Planes:
-    """In-place column pass of a 2-D program: transform axis -2 of the
-    (B, n2, w) image view through the strided-pencil kernel, chunking the
-    image width.  Non-power-of-two widths (the m+1 bins of an rfft2
-    half-spectrum) pad up to a chunk multiple around the call."""
-    b, f, w = xr.shape
+def _fit_chunk(c: int, w: int, p: plan_lib.Pass) -> int:
+    """Clamp a (possibly tuned) chunk to the width and the VMEM budget —
+    a cache entry tuned for one shape must not break another."""
+    c = max(1, min(c, 1 << (max(w, 1).bit_length() - 1)))
+    while c > 1 and plan_lib._pass_chunk_bytes(p, c) > plan_lib.VMEM_BUDGET:
+        c //= 2
+    return c
+
+
+def _cols_image_pass(xr, xi, p: plan_lib.Pass, inverse, interpret, chunk=None) -> Planes:
+    """Column pass of a 2-D program: transform axis -2 of the (B, n2, w)
+    image view through the strided-pencil kernels, sweeping the image width
+    chunk-by-chunk (``chunk`` overrides the VMEM-heuristic width — the
+    tuner's hook).  Non-power-of-two widths (the m+1 bins of an rfft2
+    half-spectrum) pad up to a chunk multiple around the call.
+
+    Fused-regime columns (``view_in == (1, 1, n2)``) are one in-place
+    whole-column pass.  Strip-mined columns (``n2 > FUSED_MAX``) arrive as
+    the re-tagged 1-D program of the n2 axis: the strided factor runs
+    through :func:`~repro.kernels.pencil.cols_pass_call` on the
+    ``(B, f, stride·w)`` view with its inter-factor twiddle broadcast
+    across the width in VMEM, and the final contiguous factor through
+    :func:`~repro.kernels.pencil.cols_natural_call`, which fuses the
+    n2-axis digit transpose into its strided write — zero standalone HBM
+    transposes either way."""
+    b, rows, w = xr.shape
+    pencils, stride, f = p.view_in if p.view_in else (1, 1, p.n)
     luts = _transform_luts(p, inverse)
-    chunk = image_chunk(p, w)
+    chunk = _fit_chunk(chunk, w, p) if chunk else image_chunk(p, w)
     pad = (-w) % chunk
     if pad:
         xr = jnp.pad(xr, ((0, 0), (0, 0), (0, pad)))
         xi = jnp.pad(xi, ((0, 0), (0, 0), (0, pad)))
-    yr, yi = pencil.cols_pass_call(
-        xr, xi, luts, kind=p.kind, n1=p.n1, n2=p.n2,
-        chunk=chunk, interpret=interpret,
-    )
+    wp = w + pad
+    if pencils == 1 or f == rows:
+        # Whole-column pass: the transform spans the full -2 axis — the
+        # fused-regime n2 ≤ FUSED_MAX case, or the distributed driver's
+        # synthetic (q, q, n) plan pass over a width-q slab.
+        yr, yi = pencil.cols_pass_call(
+            xr, xi, luts, kind=p.kind, n1=p.n1, n2=p.n2,
+            chunk=chunk, interpret=interpret,
+        )
+    elif stride > 1:
+        # Strided column factor: n2-index = t·stride + r, transform over t.
+        # The (r, image-width) pair rides along as the kernel's pencil
+        # columns; the twiddle phase depends only on r, so the (f, stride)
+        # grid is served one column per chunk and width-broadcast in VMEM.
+        assert pencils == stride, (p.view_in, "≥3-factor columns are gated")
+        x3r = xr.reshape(b, f, stride * wp)
+        x3i = xi.reshape(b, f, stride * wp)
+        twiddle = None
+        if p.twiddle_after is not None:
+            twiddle = _pass_twiddle_luts(*p.twiddle_after, inverse)
+        yr, yi = pencil.cols_pass_call(
+            x3r, x3i, luts, twiddle, kind=p.kind, n1=p.n1, n2=p.n2,
+            chunk=chunk, interpret=interpret, tw_every=wp,
+        )
+        yr = yr.reshape(b, rows, wp)
+        yi = yi.reshape(b, rows, wp)
+    else:
+        # Final contiguous factor, natural-order digit transpose fused
+        # into the write: (B, P, f, wp) → (B, f, P, wp).
+        if p.view_out == p.view_in:
+            raise NotImplementedError(
+                "pencil-order strip-mined column programs are not compiled"
+            )
+        x4r = xr.reshape(b, pencils, f, wp)
+        x4i = xi.reshape(b, pencils, f, wp)
+        yr, yi = pencil.cols_natural_call(
+            x4r, x4i, luts, kind=p.kind, n1=p.n1, n2=p.n2,
+            chunk=chunk, interpret=interpret,
+        )
+        yr = yr.reshape(b, rows, wp)
+        yi = yi.reshape(b, rows, wp)
     if pad:
         yr, yi = yr[..., :w], yi[..., :w]
     return yr, yi
@@ -235,17 +295,23 @@ def execute_program(
     inverse: bool = False,
     interpret: bool | None = None,
     batch_tiles: Mapping[int, int] | None = None,
+    chunks: Mapping[int, int] | None = None,
 ) -> Planes:
     """Walk a linearized pass program over 2-D (B, n) split planes.
 
     One ``pallas_call`` per pass; the only ops between passes are row-major
-    reshapes (views, no HBM traffic).
+    reshapes (views, no HBM traffic).  ``chunks`` (pass index → grid-step
+    width) carries the tuner's per-pass picks; unlisted passes fall back to
+    the VMEM-budget heuristic.
     """
     if interpret is None:
         interpret = should_interpret()
     fs = [q.n for q in passes if q.kind != "reorder"]
-    for p in passes:
-        xr, xi = _apply_pass(xr, xi, p, fs, inverse, interpret, batch_tiles)
+    for i, p in enumerate(passes):
+        xr, xi = _apply_pass(
+            xr, xi, p, fs, inverse, interpret, batch_tiles,
+            chunk=chunks.get(i) if chunks else None,
+        )
     return xr, xi
 
 
@@ -257,26 +323,30 @@ def execute_program2d(
     inverse: bool = False,
     interpret: bool | None = None,
     batch_tiles: Mapping[int, int] | None = None,
+    chunks: Mapping[int, int] | None = None,
 ) -> Planes:
     """Walk a mixed-axis pass program over 3-D (B, n2, n) image planes.
 
     ``axis=-1`` passes run the 1-D machinery over the ``(B·n2, n)`` row
     view; ``axis=-2`` passes transform the columns of the ``(B, n2, n)``
-    view in place through the strided-pencil kernel.  The row→column
-    handoff is a free row-major reshape — zero materialized transposes,
-    which is what makes a planned ``fft2`` exactly rows+cols kernel calls.
+    view through the strided-pencil kernels — in place for fused-regime
+    column lengths, strip-mined (multi-factor, width-swept) beyond.  The
+    row→column handoff is a free row-major reshape — zero materialized
+    transposes, which is what makes a planned ``fft2`` exactly rows+cols
+    kernel calls.  ``chunks`` maps pass index → tuned grid-step width.
     """
     if interpret is None:
         interpret = should_interpret()
     b, rows, n = xr.shape
     fs = [q.n for q in passes if q.kind != "reorder" and q.axis == -1]
-    for p in passes:
+    for i, p in enumerate(passes):
+        chunk = chunks.get(i) if chunks else None
         if p.axis == -2:
-            xr, xi = _cols_image_pass(xr, xi, p, inverse, interpret)
+            xr, xi = _cols_image_pass(xr, xi, p, inverse, interpret, chunk=chunk)
             continue
         xr2, xi2 = _apply_pass(
             xr.reshape(b * rows, n), xi.reshape(b * rows, n),
-            p, fs, inverse, interpret, batch_tiles,
+            p, fs, inverse, interpret, batch_tiles, chunk=chunk,
         )
         xr, xi = xr2.reshape(b, rows, n), xi2.reshape(b, rows, n)
     return xr, xi
@@ -308,12 +378,14 @@ def execute_plan(
     batch_tiles: Mapping[int, int] | None = None,
     order: str = "natural",
     axis: int = -1,
+    chunks: Mapping[int, int] | None = None,
 ) -> Planes:
     """Execute a pre-computed :class:`~repro.core.plan.FFTPlan` with the
     Pallas kernels over ``axis`` (-1 or -2; any leading batch dims).
 
-    ``batch_tiles`` (leaf length → tile) lets a :class:`PlannedFFT` carry the
-    negotiated tile sizes; unlisted leaves fall back to the VMEM-budget pick.
+    ``batch_tiles`` (leaf length → tile) and ``chunks`` (pass index →
+    grid-step width) let a :class:`PlannedFFT` carry its negotiated or
+    tuned sizes; unlisted entries fall back to the VMEM-budget pick.
     ``order='pencil'`` leaves the spectrum in k₁-major pencil layout (the
     fft→pointwise→ifft fast path).  ``axis=-2`` transforms the second-to-last
     axis in place via the strided-column kernel when the plan is single-pass
@@ -341,6 +413,7 @@ def execute_plan(
             inverse=inverse,
             interpret=interpret,
             batch_tiles=batch_tiles,
+            chunks=chunks,
         )
         return yr.reshape(*lead, rows, n), yi.reshape(*lead, rows, n)
     if axis == -2:
@@ -358,7 +431,7 @@ def execute_plan(
         xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)
         yr, yi = execute_plan(
             xr, xi, fft_plan, inverse=inverse, interpret=interpret,
-            batch_tiles=batch_tiles, order=order,
+            batch_tiles=batch_tiles, order=order, chunks=chunks,
         )
         return jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
     if axis != -1:
@@ -380,6 +453,7 @@ def execute_plan(
         inverse=inverse,
         interpret=interpret,
         batch_tiles=batch_tiles,
+        chunks=chunks,
     )
     # Inverse scaling is folded into each pass's transform LUT (1/f each);
     # the factors multiply so the total is exactly 1/n.

@@ -47,6 +47,7 @@ from repro.kernels.pallas_compat import compiler_params
 
 __all__ = [
     "cols_pass_call",
+    "cols_natural_call",
     "rows_natural_call",
     "rfft_recomb_call",
     "irfft_recomb_call",
@@ -109,10 +110,20 @@ def cols_pass_call(
     n2: int = 0,
     chunk: int,
     interpret: bool = False,
+    tw_every: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Strided-column transform pass: x (R, f, s), FFT of length f down the
     middle axis, written in place (same layout).  ``twiddle`` is the (f, s)
-    inter-factor grid (split planes) applied as the VMEM epilogue."""
+    inter-factor grid (split planes) applied as the VMEM epilogue.
+
+    ``tw_every`` is the width-broadcast mode of the strip-mined column
+    passes of a 2-D program: the last axis is (pencil-phase, image-width)
+    flattened, ``s = s_tw · tw_every`` with a ``(f, s_tw)`` twiddle grid,
+    and every flat position inside one width run shares the phase — so the
+    kernel is served a single ``(f, 1)`` twiddle column per chunk
+    (``chunk`` must divide ``tw_every``) and broadcasts it across the
+    chunk's image columns in VMEM instead of materialising the grid at
+    image width in HBM."""
     r, f, s = xr.shape
     assert s % chunk == 0, (s, chunk)
     grid = (r, s // chunk)
@@ -120,7 +131,14 @@ def cols_pass_call(
     in_specs = [sig, sig] + _lut_specs(kind, f, n1, n2, lambda i, j: (0, 0))
     operands = [xr, xi] + _as_ops(luts)
     has_tw = twiddle is not None
-    if has_tw:
+    if has_tw and tw_every is not None:
+        assert tw_every % chunk == 0, (tw_every, chunk)
+        assert s % tw_every == 0, (s, tw_every)
+        # One phase column per chunk, broadcast across the chunk in VMEM.
+        tw_spec = pl.BlockSpec((f, 1), lambda i, j: (0, (j * chunk) // tw_every))
+        in_specs += [tw_spec, tw_spec]
+        operands += _as_ops(twiddle)
+    elif has_tw:
         tw_spec = pl.BlockSpec((f, chunk), lambda i, j: (0, j))
         in_specs += [tw_spec, tw_spec]
         operands += _as_ops(twiddle)
@@ -191,6 +209,68 @@ def rows_natural_call(
         interpret=interpret,
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")
+        ),
+    )
+    return tuple(fn(*operands))
+
+
+def _make_cols_natural_kernel(kind: str, n1: int, n2: int, n_luts: int):
+    def kernel(x_r, x_i, *rest):
+        luts = [r[...] for r in rest[:n_luts]]
+        o_r, o_i = rest[-2], rest[-1]
+        f, c = x_r.shape[2], x_r.shape[3]
+        # (1, 1, f, c) block → (c, f): the chunk's image columns become rows.
+        xr = x_r[...].reshape(f, c).swapaxes(0, 1)
+        xi = x_i[...].reshape(f, c).swapaxes(0, 1)
+        yr, yi = _tile_transform(xr, xi, luts, kind, n1, n2)
+        # The n2-axis digit transpose lives in the BlockSpec indexing (the
+        # in/out p and k axes are swapped); the tile itself writes bin-major.
+        o_r[...] = yr.swapaxes(0, 1).reshape(1, f, 1, c)
+        o_i[...] = yi.swapaxes(0, 1).reshape(1, f, 1, c)
+
+    return kernel
+
+
+def cols_natural_call(
+    xr: jax.Array,
+    xi: jax.Array,
+    luts,
+    *,
+    kind: str,
+    n1: int = 0,
+    n2: int = 0,
+    chunk: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Final strip-mined column pass with the natural-order digit transpose
+    fused into its strided write: x (B, P, f, w) → y (B, f, P, w), where
+    ``y[b, k, p, :] = FFT_f(x[b, p, :, :], axis=0)[k]`` — i.e. the length-f
+    transform runs down the n2-axis factor while the image width ``w`` rides
+    along in chunks, and output n2-position ``k·P + p`` lands natural order
+    with zero standalone HBM transpose (the 2-D analogue of
+    :func:`rows_natural_call`)."""
+    b, p, f, w = xr.shape
+    assert w % chunk == 0, (w, chunk)
+    grid = (b, p, w // chunk)
+    in_sig = pl.BlockSpec((1, 1, f, chunk), lambda i, q, j: (i, q, 0, j))
+    out_sig = pl.BlockSpec((1, f, 1, chunk), lambda i, q, j: (i, 0, q, j))
+    in_specs = [in_sig, in_sig] + _lut_specs(
+        kind, f, n1, n2, lambda i, q, j: (0, 0)
+    )
+    operands = [xr, xi] + _as_ops(luts)
+    out_shape = [
+        jax.ShapeDtypeStruct((b, f, p, w), jnp.float32),
+        jax.ShapeDtypeStruct((b, f, p, w), jnp.float32),
+    ]
+    fn = pl.pallas_call(
+        _make_cols_natural_kernel(kind, n1, n2, len(luts)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[out_sig, out_sig],
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")
         ),
     )
     return tuple(fn(*operands))

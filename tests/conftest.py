@@ -5,12 +5,21 @@ tests spawn subprocesses with their own flags."""
 import os
 import subprocess
 import sys
+import tempfile
 
 import numpy as np
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+
+# Keep the autotuner's persistent cache out of the developer's real cache —
+# unconditionally, so an exported REPRO_TUNING_CACHE in the developer's
+# shell is never read from or written to by the suite.  Subprocesses the
+# tests spawn inherit the throwaway path via the environment.
+os.environ["REPRO_TUNING_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro-tuning-"), "tuning.json"
+)
 
 
 @pytest.fixture(scope="session")

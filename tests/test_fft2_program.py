@@ -47,23 +47,53 @@ def test_plan_fft2_is_one_joint_program():
     assert tuple(p.n for p in plan.passes if p.axis == -1) == P.program_factors(2**17)
 
 
-def test_plan_fft2_column_split_regime_gated():
+def test_plan_fft2_strip_mined_columns_past_fused():
+    # n2 = 2¹⁷ > FUSED_MAX: ONE joint program — row pass(es) then the
+    # strip-mined column factors of the n2 axis, re-tagged axis=-2 with the
+    # same pencil views as the 1-D split program (the tentpole acceptance).
+    plan = P.plan_fft2(512, 2**17)
+    cols = [p for p in plan.passes if p.axis == -2]
+    assert plan.n2 == 2**17
+    assert tuple(p.n for p in cols) == P.program_factors(2**17)
+    f0, f1 = P.program_factors(2**17)
+    assert cols[0].view_in == (2**17 // f0, f1, f0)
+    assert cols[0].twiddle_after == (f0, f1)
+    assert cols[1].view_in == (f0, 1, f1)
+    assert cols[1].view_out == (f0, f0, f1)  # fused natural digit write
+    assert plan.hbm_round_trips == len(plan.passes)
+    # column factors show up as plan leaves (LUT warm-up needs them)
+    assert {f0, f1} <= {p.n for p in plan.leaf_passes}
+
+
+def test_plan_fft2_gated_only_beyond_fused_squared():
+    # Strip-mined columns cover n2 ≤ FUSED_MAX²; beyond that the column
+    # program would need a digit-reversal relayout down axis -2.
     with pytest.raises(NotImplementedError):
-        P.plan_fft2(256, 2**17)
+        P.plan_fft2(256, 2**33)
+
+
+def test_strip_mined_joint_program_beats_fallback_bytes():
+    # Acceptance: modeled HBM bytes of the joint strip-mined program are
+    # strictly below the per-axis composition it replaced (which paid a
+    # swapaxes sandwich around its multi-pass column plan).
+    rep = rl.fft2_fallback_report(512, 2**17)
+    assert rep["joint_passes"] == 3  # 1 row pass + 2 strip-mined col passes
+    assert rep["joint_hbm_bytes"] < rep["fallback_hbm_bytes"]
+    assert rep["fallback_transpose_bytes"] > 0
 
 
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
-def test_tall_image_falls_back_to_composition(backend, rng):
-    # Column lengths beyond the fused regime have no joint program, but
-    # plan() must still serve them (per-axis composition — the pre-joint
-    # behavior the distributed driver's large-n1 shards also rely on).
+def test_tall_image_plans_joint_and_matches_numpy(backend, rng):
+    # Tall images now plan as ONE joint strip-mined program; non-native-2d
+    # backends still execute it through per-axis composition, the pallas
+    # backend through execute_program2d — both must match numpy.
     planned = F.plan(F.FFTSpec(n=64, kind="fft2", n2=2**17), backend=backend)
-    assert planned.fft_plan is None and len(planned.children) == 2
+    assert planned.fft_plan is not None and planned.fft_plan.n2 == 2**17
     x = _rand_c(rng, (1, 2**17, 64))
     y = np.asarray(planned(jnp.asarray(x)))
     ref = np.fft.fft2(x)
     assert np.abs(y - ref).max() <= 1e-4 * np.abs(ref).max(), backend
-    # the joint-program halves still compose through the children
+    # the joint-program halves compose to the same transform
     yr, yi = planned.apply_cols(*planned.apply_rows(jnp.asarray(x.real), jnp.asarray(x.imag)))
     err = np.abs((np.asarray(yr) + 1j * np.asarray(yi)) - ref).max()
     assert err <= 1e-4 * np.abs(ref).max(), backend
@@ -101,8 +131,11 @@ def test_fft_pass_report_2d():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("n2,n", [(512, 512), (4, 2**17)])
+@pytest.mark.parametrize("n2,n", [(512, 512), (4, 2**17), (2**17, 64)])
 def test_fft2_schedule_is_pure_pass_program(n2, n):
+    # (2**17, 64) is the strip-mined acceptance case: a taller-than-fused
+    # image still lowers to pallas_calls + reshapes only — the column
+    # digit transpose and inter-factor twiddle live inside the kernels.
     planned = F.plan(F.FFTSpec(n=n, n2=n2, kind="fft2"), backend="pallas")
     x = jnp.zeros((1, n2, n), jnp.float32)
     jaxpr = jax.make_jaxpr(lambda a, b: planned.apply_planes(a, b))(x, x).jaxpr
@@ -198,6 +231,36 @@ def test_ragged_width_chunk_bounds_padding():
         assert (-w) % chunk < w // 4  # padding waste is bounded, never ~2x
     for w in (128, 512, 2048):  # pow2 widths stay exact
         assert (-w) % ops.image_chunk(p, w) == 0
+
+
+def test_ragged_width_and_chunk1_execution(rng):
+    # Ragged 3·2^k widths and the chunk=1 degenerate execute correctly on
+    # both program shapes: a 2-D column pass over a width-24 image, and a
+    # 1-D split program with every pass forced to chunk=1.
+    from repro.kernels import ops
+
+    p = P.Pass(
+        kind="direct", n=64, view_in=(1, 1, 64), view_out=(1, 1, 64),
+        order="natural", axis=-2,
+    )
+    x = _rand_c(rng, (2, 64, 24))
+    ref = np.fft.fft(x, axis=-2)
+    for chunks in (None, {0: 1}):
+        yr, yi = ops.execute_program2d(
+            jnp.asarray(x.real), jnp.asarray(x.imag), (p,),
+            interpret=True, chunks=chunks,
+        )
+        err = np.abs((np.asarray(yr) + 1j * np.asarray(yi)) - ref).max()
+        assert err <= 1e-4 * np.abs(ref).max(), chunks
+    passes1d = P.compile_passes(1024, 256)  # (32, 32) split program
+    x1 = _rand_c(rng, (2, 1024))
+    ref1 = np.fft.fft(x1)
+    yr, yi = ops.execute_program(
+        jnp.asarray(x1.real), jnp.asarray(x1.imag), passes1d,
+        interpret=True, chunks={i: 1 for i in range(len(passes1d))},
+    )
+    err = np.abs((np.asarray(yr) + 1j * np.asarray(yi)) - ref1).max()
+    assert err <= 1e-4 * np.abs(ref1).max()
 
 
 def test_apply_cols_accepts_narrow_slab(rng):

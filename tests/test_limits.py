@@ -1,0 +1,61 @@
+"""core.limits is the grep-asserted single source of every regime constant."""
+
+import os
+import re
+
+import repro.core.limits as limits
+from repro.core import overlap, plan
+from repro.core.conv import next_pow2
+
+SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src", "repro"
+)
+
+#: Assignment sites of these names may exist ONLY in core/limits.py.
+CONSTANTS = ("DIRECT_MAX", "FUSED_MAX", "OS_FACTOR", "VMEM_BUDGET")
+
+
+def _py_files():
+    for root, _dirs, files in os.walk(SRC):
+        if "__pycache__" in root:
+            continue
+        for f in files:
+            if f.endswith(".py"):
+                yield os.path.join(root, f)
+
+
+def test_constants_assigned_only_in_limits():
+    pattern = re.compile(
+        rf"^\s*({'|'.join(CONSTANTS)})\s*(?::[^=]+)?=[^=]", re.MULTILINE
+    )
+    offenders = []
+    for path in _py_files():
+        if path.endswith(os.path.join("core", "limits.py")):
+            continue
+        with open(path) as f:
+            text = f.read()
+        for m in pattern.finditer(text):
+            offenders.append((os.path.relpath(path, SRC), m.group(1)))
+    assert not offenders, (
+        f"regime constants re-assigned outside core/limits.py: {offenders}"
+    )
+
+
+def test_next_pow2_defined_only_in_limits():
+    offenders = [
+        os.path.relpath(p, SRC)
+        for p in _py_files()
+        if not p.endswith(os.path.join("core", "limits.py"))
+        and re.search(r"^\s*def next_pow2\b", open(p).read(), re.MULTILINE)
+    ]
+    assert not offenders, offenders
+
+
+def test_reexports_are_the_same_objects():
+    # The historical import sites keep working and agree with the source.
+    assert plan.FUSED_MAX is limits.FUSED_MAX
+    assert plan.DIRECT_MAX is limits.DIRECT_MAX
+    assert plan.VMEM_BUDGET is limits.VMEM_BUDGET
+    assert overlap.OS_FACTOR is limits.OS_FACTOR
+    assert next_pow2 is limits.next_pow2
+    assert limits.next_pow2(1025) == 2048 and limits.next_pow2(1) == 1

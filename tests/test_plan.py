@@ -116,6 +116,31 @@ def test_pass_hbm_bytes_model():
     assert P.program_hbm_bytes(plan.passes, 2) > P.program_hbm_bytes(plan.passes, 1)
 
 
+def test_pick_pass_chunk_ragged_widths():
+    # Non-pow2 widths: the chunk starts from the largest power of two BELOW
+    # the width (the executor pads the last partial chunk), including the
+    # pow2-floor boundary width 65537 and 3·2^k widths.
+    p = P.plan_fft(2**18).passes[0]  # strided column pass, f=512
+    c = P.pick_pass_chunk(p, width=65537)
+    assert c & (c - 1) == 0 and c <= 65536
+    assert P._pass_chunk_bytes(p, c) <= P.VMEM_BUDGET or c == 1
+    for k in (4, 8, 12):
+        w = 3 << k  # 3·2^k floors to 2^(k+1)
+        c = P.pick_pass_chunk(p, width=w)
+        assert c & (c - 1) == 0 and c <= 1 << (k + 1)
+    # degenerate width: one pencil column still yields a valid chunk
+    assert P.pick_pass_chunk(p, width=1) == 1
+
+
+def test_pick_pass_chunk_chunk1_degenerate():
+    # A binding budget collapses to chunk=1 (padded sublanes beat a working
+    # set that cannot be placed at all) — with and without width override.
+    p = P.plan_fft(2**18).passes[0]
+    assert P.pick_pass_chunk(p, budget=1) == 1
+    assert P.pick_pass_chunk(p, budget=1, width=65537) == 1
+    assert P.pick_pass_chunk(p, budget=1, width=3 << 8) == 1
+
+
 def test_pick_pass_chunk_fits_budget():
     # The VMEM budget is binding (a chunk below one 128-lane tile beats a
     # working set Mosaic cannot place at all) — incl. huge factors like 2²⁶'s
