@@ -1,0 +1,165 @@
+"""Serving microbenchmark: prefill / insert / generate timed separately.
+
+Decode-microbenchmark in the maxtext style: each serving phase is timed on
+its own (prompt prefill, slot insert, scan generate) and throughput is
+swept over batch sizes, all through the one measurement path the CLI also
+uses (:func:`repro.serving.spectral_serve.sweep_once`).
+
+Before any timing, two gates must pass:
+
+* **numerics** — streamed spectral decode must match the one-shot
+  ``spectral_forward`` to 1e-3 (full mode checks a prompt PAST the fused
+  FFT regime, so prefill provably routes through overlap-save), and
+  stream-mode greedy generation must equal the ring-buffer oracle
+  token-for-token;
+* **plan discipline** — a warm serving sweep must create ZERO new FFT
+  plans (``core.fft.plan_log()``): every spectral flush inside the scan
+  reuses the plan cached at trace time.
+
+Full runs append a ``BENCH_serve.json`` trajectory entry (per-phase
+seconds, decode and end-to-end tokens/sec per batch size, and the spectral
+stream plan metadata).  ``--smoke`` shrinks sizes for CI.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._trajectory import append_trajectory
+from repro.configs.base import get_config
+from repro.configs.reduce import make_reduced
+from repro.core import fft as fft_lib
+from repro.core.limits import FUSED_MAX
+from repro.models import model as model_lib
+from repro.models.layers import spectral as spec_lib
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.spectral_serve import sweep_once
+
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+ARCH = "h2o-danube-1.8b"
+
+
+def _cfg(compute_dtype: str = "bfloat16", filter_len: int = 32):
+    cfg = make_reduced(get_config(ARCH))
+    return dataclasses.replace(
+        cfg,
+        num_layers=2,
+        block_pattern=("spectral", "attn"),
+        spectral_filter_len=filter_len,
+        compute_dtype=compute_dtype,
+    )
+
+
+def _gate_layer_stream(emit, s: int, lf: int, d: int, tol: float = 1e-3):
+    """Streamed decode == one-shot spectral_forward on the mixer layer."""
+    cfg = dataclasses.replace(_cfg("float32", lf), d_model=d)
+    c, _ = spec_lib.stream_grain(cfg)
+    t = c + c // 2  # crosses at least one chunk flush
+    from repro.utils.params import unzip
+
+    params, _ = unzip(spec_lib.spectral_init(jax.random.PRNGKey(0), cfg, jnp.float32))
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (1, s + t, d), jnp.float32)
+    ref = spec_lib.spectral_forward(params, x, cfg=cfg)
+    _, cache = spec_lib.spectral_forward(params, x[:, :s], cfg=cfg, return_cache=True)
+    step = jax.jit(
+        lambda xt, cc: spec_lib.spectral_stream_decode(params, xt, cc, cfg=cfg)
+    )
+    err = 0.0
+    for i in range(t):
+        y, cache = step(x[:, s + i : s + i + 1], cache)
+        err = max(err, float(jnp.abs(y - ref[:, s + i : s + i + 1]).max()))
+    emit(f"gate,layer_stream,S={s},Lf={lf},err={err:.2e}")
+    assert err < tol, f"streamed decode vs one-shot: err {err} >= {tol} at S={s}"
+
+
+def _gate_model_oracle(emit, engine: Engine, params, prompts, max_new: int):
+    """Stream-mode greedy tokens == ring-buffer oracle tokens."""
+    ring = Engine(
+        dataclasses.replace(engine.cfg, spectral_decode_mode="ring"),
+        params,
+        engine.scfg,
+    )
+    a = np.asarray(engine.generate(prompts, max_new=max_new))
+    b = np.asarray(ring.generate(prompts, max_new=max_new))
+    emit(f"gate,stream_vs_ring,match={bool((a == b).all())}")
+    assert (a == b).all(), "stream-mode tokens diverge from ring oracle"
+
+
+def _gate_plan_discipline(emit, engine: Engine, *, batch, prompt_len, max_new):
+    """Warm serving sweep must create zero new FFT plans."""
+    sweep_once(engine, batch=batch, prompt_len=prompt_len, max_new=max_new, warmup=0)
+    fft_lib.clear_plan_log()
+    sweep_once(engine, batch=batch, prompt_len=prompt_len, max_new=max_new, warmup=0)
+    n = len(fft_lib.plan_log())
+    emit(f"gate,plan_discipline,new_plans={n}")
+    assert n == 0, f"{n} new FFT plans created during a warm serving sweep"
+
+
+def main(emit=print, smoke: bool = False):
+    filter_len = 16 if smoke else 32
+    prompt_len = 12 if smoke else 64
+    max_new = 8 if smoke else 32
+    batches = [2] if smoke else [1, 2, 4, 8]
+
+    # -- gates (float32 engine: numerics before timing) --------------------
+    _gate_layer_stream(emit, s=48, lf=filter_len, d=16)
+    if not smoke:
+        # prompt past the fused FFT regime: prefill must route through
+        # overlap-save and the carried tail must still line up exactly.
+        _gate_layer_stream(emit, s=FUSED_MAX + 128, lf=filter_len, d=4)
+
+    cfg32 = _cfg("float32", filter_len)
+    params, _ = model_lib.init_unzipped(jax.random.PRNGKey(0), cfg32)
+    eng32 = Engine(cfg32, params, ServeConfig(max_new=max_new))
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (2, prompt_len), 4, cfg32.vocab_size
+    )
+    _gate_model_oracle(emit, eng32, params, prompts, max_new)
+    _gate_plan_discipline(
+        emit, eng32, batch=2, prompt_len=prompt_len, max_new=max_new
+    )
+
+    # -- timed sweep (serving dtype) ---------------------------------------
+    cfg = _cfg("float32" if smoke else "bfloat16", filter_len)
+    if not smoke:
+        params, _ = model_lib.init_unzipped(jax.random.PRNGKey(0), cfg)
+    engine = Engine(cfg, params, ServeConfig(max_new=max_new))
+
+    cols = (
+        "batch,prompt_len,max_new,prefill_s,insert_s,generate_s,"
+        "decode_tok_per_s,e2e_tok_per_s"
+    )
+    emit(f"name,{cols}")
+    rows = []
+    for b in batches:
+        r = sweep_once(
+            engine, batch=b, prompt_len=prompt_len, max_new=max_new, warmup=1
+        )
+        rows.append(r)
+        emit(
+            "serve,"
+            + ",".join(str(r[k]) for k in cols.split(","))
+        )
+
+    if not smoke:
+        append_trajectory(
+            TRAJECTORY,
+            model=ARCH,
+            sweep=rows,
+            plan=spec_lib.stream_plan_info(cfg, batch=max(batches)),
+        )
+        emit(f"# trajectory appended to {os.path.abspath(TRAJECTORY)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

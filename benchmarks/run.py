@@ -15,6 +15,7 @@ from benchmarks import (
     bench_fftconv,
     bench_roofline,
     bench_sar,
+    bench_serve,
     bench_table1,
     bench_tuning,
 )
@@ -25,6 +26,7 @@ SUITES = {
     "fftconv": bench_fftconv.main,   # LM integration (spectral layers)
     "tuning": bench_tuning.main,     # autotuned vs fixed-heuristic blocks
     "roofline": bench_roofline.main, # dry-run roofline summary
+    "serve": bench_serve.main,       # prefill/insert/generate phase timings
 }
 
 #: Suites with a fast-path smoke mode; the rest are import-checked only.
@@ -35,6 +37,9 @@ SMOKE_SUITES = {
     "fftconv": lambda: bench_fftconv.main(smoke=True),
     # runs the tuner (model + measure) and asserts cache determinism
     "tuning": lambda: bench_tuning.main(smoke=True),
+    # asserts streamed == one-shot numerics + zero-new-plan discipline
+    # before timing a small serving sweep
+    "serve": lambda: bench_serve.main(smoke=True),
 }
 
 

@@ -106,3 +106,42 @@ print("tuning cache:", tuning.cache_path())         # REPRO_TUNING_CACHE overrid
 print("measurements this process:", len(tuning.measure_log()))
 pt2 = F.plan(F.FFTSpec(n=2**17, kind="fft"), backend="pallas", tune="measure")
 print("second plan is the same handle (zero re-measurement):", pt2 is pt)
+
+# ---- 12. streaming spectral serving: prefill / insert / generate -----------
+# The LM engine serves tokens through three compiled phases.  prefill runs
+# the prompt once and converts caches to decode layout; insert splices the
+# request into a slot of a RUNNING batch (the spectral mixer's stream state
+# is re-phased to the batch's chunk clock, so a late joiner decodes exactly
+# as it would solo); generate advances every slot in ONE lax.scan — the
+# spectral layer's once-per-chunk FFT flush reuses the plan cached at trace
+# time, so a warm loop creates zero new plans.
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.spectral_serve import ServeSession
+
+cfg = ModelConfig(
+    family="dense", num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+    d_ff=64, vocab_size=128, block_pattern=("spectral", "attn"),
+    spectral_filter_len=8, compute_dtype="float32",
+)
+params, _ = M.init_unzipped(jax.random.PRNGKey(0), cfg)
+eng = Engine(cfg, params, ServeConfig(max_new=6))
+prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4, cfg.vocab_size)
+
+sess = ServeSession(eng, slots=2, max_len=16)
+s0 = sess.submit(prompts[0])       # prefill + insert into slot 0
+sess.run(2)                        # slot 0 decodes alone for 2 steps
+s1 = sess.submit(prompts[1])       # joins the RUNNING batch mid-stream
+sess.run(5)                        # both slots advance in one scan
+print("slot0 tokens:", sess.output(s0)[:6])
+print("slot1 tokens:", sess.output(s1)[:6])
+solo = eng.generate(prompts)       # whole-batch convenience wrapper
+print("mid-stream join == solo decode:",
+      sess.output(s1)[:6] == solo[1].tolist())
+F.clear_plan_log()
+sess.run(3)                        # warm loop: every flush hits the plan cache
+print("new FFT plans during warm generate:", len(F.plan_log()))
+print("phase seconds:", {k: round(v, 4) for k, v in sess.phase_s.items()})

@@ -71,6 +71,13 @@ class ModelConfig:
     # --- paper integration ----------------------------------------------
     use_spectral_mixer: bool = False  # swap attention for FFT long-conv
     spectral_filter_len: int = 1024
+    # Spectral decode state: "stream" carries the overlap-save tail + a
+    # chunk accumulator and flushes through the cached block plan once per
+    # chunk (amortized FFT decode); "ring" is the O(Lf·D)-per-token direct
+    # dot (the exactness oracle).  spectral_decode_chunk=0 → sized from the
+    # filter (max(8, next_pow2(Lf)/4)).
+    spectral_decode_mode: str = "stream"  # stream | ring
+    spectral_decode_chunk: int = 0
     # --- numerics / execution -------------------------------------------
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"

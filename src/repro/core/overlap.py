@@ -56,6 +56,7 @@ __all__ = [
     "filter_spectrum",
     "conv_frames",
     "fft_conv_os",
+    "stream_lookahead",
     "StreamingConv",
 ]
 
@@ -98,12 +99,16 @@ def _resolve_block(
     batch: int,
     backend: Optional[str],
     tune: Optional[str],
+    chunk: Optional[int] = None,
 ) -> int:
     """The block an overlap-save call actually uses: an explicit ``block``
     is validated and wins; otherwise the autotuner decides (``tune="off"``
     → the fixed ``OS_FACTOR`` heuristic, ``"model"`` → the roofline
     modeled minimum, ``"measure"`` → the measured winner from the
-    persistent cache — see :mod:`repro.core.tuning`)."""
+    persistent cache — see :mod:`repro.core.tuning`).  ``chunk`` keys the
+    decision to a streaming call grain: the tuner models and measures
+    per-chunk calls (state + chunk in, chunk out) instead of one long
+    ingest."""
     if block is not None:
         return pick_block(filter_len, block)
     from repro.core import tuning  # lazy: tuning measures through this module
@@ -111,7 +116,7 @@ def _resolve_block(
     mode = tuning.resolve_mode(tune)
     if mode == "off" or filter_len < 2:
         return pick_block(filter_len)
-    return tuning.tuned_block(L, filter_len, batch, backend, mode)
+    return tuning.tuned_block(L, filter_len, batch, backend, mode, chunk=chunk)
 
 
 def frame_signal(
@@ -227,6 +232,73 @@ def fft_conv_os(
     return y.astype(out_dtype)
 
 
+def _stream_conv(
+    xin: jax.Array,
+    Hr: jax.Array,
+    Hi: jax.Array,
+    *,
+    block: int,
+    overlap: int,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Causal conv of ``xin`` (carried history prefix included) through the
+    cached block plan, keeping only the outputs past the history:
+    ``conv(xin)[..., overlap:]``.
+
+    When everything fits one block (the decode-grain case: a flush of
+    ``Lh − 1`` tail + one chunk) this is a single padded frame through ONE
+    cached rfft/irfft pair — no framing gather at all.  Every kept output
+    position ``p ≥ overlap ≥ j`` for all filter taps ``j``, so the circular
+    convolution never wraps into the kept range and the single frame equals
+    the framed multi-block result.
+    """
+    L = xin.shape[-1]
+    if L <= block:
+        pad = [(0, 0)] * (xin.ndim - 1) + [(0, block - L)]
+        frames = jnp.pad(xin, pad)[..., None, :]
+        y = conv_frames(frames, Hr, Hi, overlap=overlap, backend=backend)
+        return y[..., 0, : L - overlap]
+    step = block - overlap
+    nb = -(-L // step)
+    frames = frame_signal(xin, block, step, nb)
+    tails = conv_frames(frames, Hr, Hi, overlap=overlap, backend=backend)
+    lead = tails.shape[:-2]
+    y = tails.reshape(*lead, nb * step)[..., :L]
+    return y[..., overlap:]
+
+
+def stream_lookahead(
+    tail: jax.Array,
+    Hr: jax.Array,
+    Hi: jax.Array,
+    *,
+    window: int,
+    block: int,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """History-only contributions for the next ``window`` stream positions.
+
+    ``tail``: (..., Lh − 1) — the carried overlap state.  Returns
+    (..., window): entry ``i`` is what the causal conv would emit at the
+    ``i``-th upcoming position if every upcoming input were zero, i.e. the
+    Σ_{j>i} h[j]·x[t−j] half of the output.  This is the flush primitive of
+    the amortized spectral decode: the serving cache adds the direct head
+    (taps ``j ≤ i`` against the accumulating chunk) per token and refreshes
+    this lookahead once per ``window`` tokens through the same cached block
+    plan as prefill — no per-token transforms.
+
+    ``Hr``/``Hi`` must be :func:`filter_spectrum` planes at ``block``; the
+    kept outputs are exact (no circular contamination) for any
+    ``tail``/``window`` because only positions ≥ ``len(tail)`` are kept.
+    """
+    lead = tail.shape[:-1]
+    zeros = jnp.zeros((*lead, window), jnp.float32)
+    xin = jnp.concatenate([tail.astype(jnp.float32), zeros], axis=-1)
+    return _stream_conv(
+        xin, Hr, Hi, block=block, overlap=tail.shape[-1], backend=backend
+    )
+
+
 class StreamingConv:
     """Chunked causal convolution with the overlap tail as explicit state.
 
@@ -249,9 +321,12 @@ class StreamingConv:
 
     With ``block=None`` the block is tuned like :func:`fft_conv_os`'s
     (``tune=`` modes, persistent cache); ``chunk_hint`` is the expected
-    per-call chunk length the measurement pass times against (chunks are
-    not known at construction — defaults to a long-ingest stand-in of 8
-    heuristic blocks).
+    per-call chunk length.  When given, the tuner keys the decision to that
+    decode grain and its measurement pass times chunked streaming calls
+    (state + chunk in) rather than one long ingest — serving decode and
+    strip ingest genuinely prefer different blocks (chunks shorter than the
+    heuristic block waste the unfilled step on every call).  Without a hint
+    the measurement uses a long-ingest stand-in of 8 heuristic blocks.
     """
 
     def __init__(
@@ -266,9 +341,10 @@ class StreamingConv:
         self.h = jnp.asarray(h, jnp.float32)
         self.filter_len = int(self.h.shape[-1])
         self.overlap = self.filter_len - 1
+        self.chunk_hint = chunk_hint
         L_tune = chunk_hint or 8 * pick_block(self.filter_len)
         self.block = _resolve_block(
-            self.filter_len, block, L_tune, 1, backend, tune
+            self.filter_len, block, L_tune, 1, backend, tune, chunk=chunk_hint
         )
         self.backend = backend
         self._Hr, self._Hi = filter_spectrum(self.h, self.block, backend)
@@ -291,21 +367,38 @@ class StreamingConv:
         xin = jnp.concatenate(
             [state.astype(jnp.float32), x.astype(jnp.float32)], axis=-1
         )
-        L = xin.shape[-1]
-        step = self.block - self.overlap
-        nb = -(-L // step)
-        frames = frame_signal(xin, self.block, step, nb)
-        tails = conv_frames(
-            frames, self._Hr, self._Hi, overlap=self.overlap, backend=self.backend
-        )
-        lead = tails.shape[:-2]
-        y = tails.reshape(*lead, nb * step)[..., :L]
         # The first ``overlap`` outputs re-derive samples the previous chunk
-        # already emitted; the remainder is this chunk's contribution.
-        y = y[..., self.overlap :]
+        # already emitted; _stream_conv keeps only this chunk's contribution
+        # (single padded frame when state + chunk fit one block).
+        y = _stream_conv(
+            xin,
+            self._Hr,
+            self._Hi,
+            block=self.block,
+            overlap=self.overlap,
+            backend=self.backend,
+        )
         new_state = (
             xin[..., xin.shape[-1] - self.overlap :]
             if self.overlap
             else xin[..., :0]
         )
         return y.astype(out_dtype), new_state
+
+    def lookahead(self, state: jax.Array, window: int) -> jax.Array:
+        """History-only outputs for the next ``window`` positions — what the
+        stream would emit if the next ``window`` samples were zero.  The
+        decode-grain flush primitive; see :func:`stream_lookahead`."""
+        if state.shape[-1] != self.overlap:
+            raise ValueError(
+                f"state carries {state.shape[-1]} samples, filter needs "
+                f"{self.overlap}"
+            )
+        return stream_lookahead(
+            state,
+            self._Hr,
+            self._Hi,
+            window=window,
+            block=self.block,
+            backend=self.backend,
+        )

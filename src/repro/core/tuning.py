@@ -246,7 +246,14 @@ class TuningSpace:
     # -- construction ------------------------------------------------------
 
     @classmethod
-    def for_os_block(cls, L: int, Lh: int, batch: int, backend: Optional[str]):
+    def for_os_block(
+        cls,
+        L: int,
+        Lh: int,
+        batch: int,
+        backend: Optional[str],
+        chunk: Optional[int] = None,
+    ):
         """Overlap-save block sizes for a ``(batch, L) ⊛ (Lh,)`` convolution.
 
         Candidates: every power of two from the fixed heuristic's floor
@@ -256,6 +263,13 @@ class TuningSpace:
         (framing redundancy + plan traffic per block), which is exactly the
         trade the block size moves: small blocks re-transform more overlap,
         large blocks pay bigger per-block programs.
+
+        ``chunk`` keys the decision to a *streaming call grain* (serving
+        decode, strip ingest): the modeled signal becomes one chunked call
+        (``Lh − 1`` carried tail + ``chunk`` fresh samples) and measurement
+        times :class:`repro.core.overlap.StreamingConv` chunk calls instead
+        of one long ingest — a block sized for a million-sample ingest
+        wastes its unfilled step every call when chunks are short.
         """
         from repro.analysis import roofline as rl
         from repro.core import overlap as ov
@@ -269,9 +283,10 @@ class TuningSpace:
             if b != default and b > Lh - 1:
                 blocks.append(b)
             b *= 2
+        L_call = (chunk + Lh - 1) if chunk else L  # per-call signal length
         cands = []
         for blk in blocks:
-            modeled = rl.conv_report(L, Lh, batch=batch, block=blk)
+            modeled = rl.conv_report(L_call, Lh, batch=batch, block=blk)
             leaf = plan_lib._leaf_pass(max(blk // 2, 1))
             vmem = plan_lib.vmem_bytes(leaf, plan_lib.pick_batch_tile(leaf))
             cands.append(
@@ -283,11 +298,22 @@ class TuningSpace:
             import jax.numpy as jnp
             import numpy as np
 
-            x = jnp.asarray(
-                np.random.default_rng(0).standard_normal((batch, L)), jnp.float32
-            )
             h = jnp.asarray(
                 np.random.default_rng(1).standard_normal((Lh,)), jnp.float32
+            )
+            if chunk:
+                sc = ov.StreamingConv(
+                    h, block=config["block"], backend=backend, tune="off"
+                )
+                x = jnp.asarray(
+                    np.random.default_rng(0).standard_normal((batch, chunk)),
+                    jnp.float32,
+                )
+                state = sc.init_state((batch,))
+                fn = jax.jit(sc.__call__)
+                return _time(lambda: fn(x, state))
+            x = jnp.asarray(
+                np.random.default_rng(0).standard_normal((batch, L)), jnp.float32
             )
             fn = jax.jit(
                 lambda a, b: ov.fft_conv_os(
@@ -297,6 +323,8 @@ class TuningSpace:
             return _time(lambda: fn(x, h))
 
         key = f"{backend or 'auto'}|os_block|L={L},Lh={Lh},batch={batch}"
+        if chunk:
+            key += f",chunk={chunk}"
         return cls("os_block", key, cands, measure)
 
     @classmethod
@@ -485,11 +513,14 @@ def tuned_block(
     batch: int = 1,
     backend: Optional[str] = None,
     tune: Optional[str] = None,
+    chunk: Optional[int] = None,
 ) -> int:
     """The overlap-save block size for a ``(batch, L) ⊛ (Lh,)`` convolution
-    under the resolved tune mode (``off`` → the ``OS_FACTOR`` heuristic)."""
+    under the resolved tune mode (``off`` → the ``OS_FACTOR`` heuristic).
+    ``chunk`` keys the decision (and its measurement) to a streaming call
+    grain — see :meth:`TuningSpace.for_os_block`."""
     mode = resolve_mode(tune)
-    space = TuningSpace.for_os_block(L, Lh, batch, backend)
+    space = TuningSpace.for_os_block(L, Lh, batch, backend, chunk=chunk)
     return int(space.decide(mode)["block"])
 
 

@@ -347,6 +347,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False) -
             else:
                 lowered = _lower_decode(cfg, shape, mesh, par)
                 tokens = shape.global_batch  # one new token per sequence
+                if "spectral" in cfg.pattern():
+                    # streaming-conv decode plan: chunk/block grain, flush
+                    # cadence and per-flush HBM traffic of the spectral state
+                    from repro.models.layers import spectral as spec_lib
+
+                    record["spectral_stream"] = spec_lib.stream_plan_info(
+                        cfg, batch=shape.global_batch
+                    )
             n_active = active_params(cfg)
             dtype = "bf16"
 

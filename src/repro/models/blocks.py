@@ -158,7 +158,9 @@ def block_cache_init(kind: str, cfg, batch: int, max_len: int, dtype=jnp.bfloat1
     if kind == "slstm":
         return xlstm_lib.init_slstm_cache(cfg, batch, dtype)
     if kind == "spectral":
-        return spec_lib.init_spectral_cache(cfg, batch, dtype)
+        if getattr(cfg, "spectral_decode_mode", "stream") == "ring":
+            return spec_lib.init_spectral_cache(cfg, batch, dtype)
+        return spec_lib.init_spectral_stream_cache(cfg, batch, dtype)
     raise ValueError(f"unknown block kind {kind!r}")
 
 
@@ -193,7 +195,14 @@ def block_decode(params, x, cache, t, *, kind: str, cfg, mrope_positions=None):
         h2 = rms_norm(params["norm2"], x, eps=cfg.norm_eps)
         return x + mlp_apply(params["mlp"], h2, act=cfg.act), cache
     if kind == "spectral":
-        res, cache = spec_lib.spectral_decode(params["mixer"], h, cache, cfg=cfg)
+        # dispatch on the cache layout, not cfg: prepared caches may come
+        # from either mode and both must decode (ring is the oracle path).
+        if isinstance(cache, spec_lib.SpectralStreamCache):
+            res, cache = spec_lib.spectral_stream_decode(
+                params["mixer"], h, cache, cfg=cfg
+            )
+        else:
+            res, cache = spec_lib.spectral_decode(params["mixer"], h, cache, cfg=cfg)
         x = x + res
         h2 = rms_norm(params["norm2"], x, eps=cfg.norm_eps)
         return x + mlp_apply(params["mlp"], h2, act=cfg.act), cache

@@ -243,7 +243,11 @@ def attn_decode(
     window: Optional[int] = None,
     mrope_positions=None,
 ):
-    """One decode step.  x: (B, 1, D); t: scalar int32 current position.
+    """One decode step.  x: (B, 1, D); t: int32 current position — a scalar
+    (whole batch at one timeline) or a (B,) vector of per-slot positions
+    (continuous batching: each serving slot keeps its OWN timeline, so a
+    request inserted mid-stream decodes at its own ``t`` with no position
+    shifting).
 
     Returns (y, new_cache).  Sliding-window layers use a ring buffer of
     ``window`` slots (t mod window); keys are stored already rotated at
@@ -252,27 +256,43 @@ def attn_decode(
     b, _, d = x.shape
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     g = h // kv
-    positions = jnp.full((b, 1), t, dtype=jnp.int32)
+    t = jnp.asarray(t, jnp.int32)
+    per_slot = t.ndim == 1
+    t_vec = t if per_slot else jnp.full((b,), t, jnp.int32)
+    positions = t_vec[:, None]
     q, k_new, v_new = _qkv(params, x, cfg, positions, mrope_positions)
 
     slots = cache.k.shape[1]
-    slot = (t % slots) if window else t
     quantized = cache.k.dtype == jnp.int8
     # No explicit sharding annotation here: the cache arrives with the
     # launcher-chosen sharding (e.g. seq over ('data','model') for long
     # contexts) and the update must inherit it — a fixed kv_seq constraint
     # forces SPMD into a full rematerialisation of the cache (measured:
     # +17 GB temp on gemma3 long_500k).
+    if per_slot:
+        # Per-row scatter at each slot's own write position.
+        rows = jnp.arange(b)
+        slot_vec = (t_vec % slots) if window else t_vec
+
+        def upd(buf, new):
+            return buf.at[rows, slot_vec].set(new[:, 0].astype(buf.dtype))
+
+    else:
+        slot = (t % slots) if window else t
+
+        def upd(buf, new):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, new.astype(buf.dtype), slot, axis=1
+            )
+
     if quantized:
         kq_new, ks_new = _quant_tok(k_new)
         vq_new, vs_new = _quant_tok(v_new)
-        k = jax.lax.dynamic_update_slice_in_dim(cache.k, kq_new, slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache.v, vq_new, slot, axis=1)
-        k_scale = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks_new, slot, axis=1)
-        v_scale = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs_new, slot, axis=1)
+        k, v = upd(cache.k, kq_new), upd(cache.v, vq_new)
+        k_scale = upd(cache.k_scale, ks_new)
+        v_scale = upd(cache.v_scale, vs_new)
     else:
-        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+        k, v = upd(cache.k, k_new), upd(cache.v, v_new)
         k_scale = v_scale = None
 
     # Grouped read against the compact cache: q (B,KV,G,hd).  The query is
@@ -302,10 +322,11 @@ def attn_decode(
     slot_idx = jnp.arange(slots)
     if window:
         # Ring buffer: once t >= slots every slot holds a live key.
-        valid = slot_idx <= jnp.minimum(t, slots - 1)
+        lim = jnp.minimum(t_vec, slots - 1)
     else:
-        valid = slot_idx <= t
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        lim = t_vec
+    valid = slot_idx[None, :] <= lim[:, None]  # (B, slots) per-row mask
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     if quantized:
         # Fold the per-slot v scale into the probs *before* quantising them

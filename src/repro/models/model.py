@@ -170,7 +170,10 @@ def prepare_decode_caches(caches, cfg, prefill_len: int, max_len: int):
     Global-attention layers: pad the KV axis out to ``max_len`` slots.
     Sliding-window layers: re-scatter the last ``window`` positions into the
     ring-buffer slot order (slot = pos % window) used by ``attn_decode``.
-    Recurrent caches (SSM/xLSTM/spectral) pass through unchanged.
+    Recurrent caches (SSM/xLSTM/spectral ring AND stream) pass through
+    unchanged — the spectral stream cache is already in decode layout when
+    ``spectral_forward(return_cache=True)`` builds it.  jit-safe, so the
+    serving engine runs it inside its compiled prefill phase.
     """
     from repro.models.layers.attention import KVCache
 
@@ -231,8 +234,10 @@ def prefill(params, batch, cfg):
 def decode_step(params, tokens, caches, t, cfg, *, embeds=None, mrope_positions=None):
     """One decode step.  tokens: (B,) int32 (or embeds (B,1,D) for audio).
 
-    t: scalar int32 — the position being *written* (0-based).  Returns
-    (logits (B, vocab), new_caches).
+    t: int32 — the position being *written* (0-based), a scalar for a
+    single shared timeline or a (B,) vector of per-slot positions (the
+    serving engine's continuous-batching state, where each slot keeps its
+    own length).  Returns (logits (B, vocab), new_caches).
     """
     cd = _cdtype(cfg)
     if cfg.frontend == "audio" and embeds is not None:

@@ -1,23 +1,44 @@
-"""Batched decode engine: prefill → jitted token loop with KV/SSM caches.
+"""Batched decode engine: jitted prefill / insert / generate phases.
 
-A deliberately small but real serving path: batch of prompts in, prefill
-once (building caches), then a jit-compiled ``decode_fn`` generates tokens
-until ``max_new`` (per-sequence EOS masking included).  The decode step is
-the function the dry-run lowers for the ``decode_*`` shape cells.
+The serving core under :mod:`repro.serving.spectral_serve`.  Three compiled
+phases over an explicit :class:`DecodeState` (continuous-batching-lite):
+
+* **prefill** — run the prompt once, convert the caches to decode layout
+  (``prepare_decode_caches`` runs inside the jit) and sample the first
+  token: a :class:`PrefillResult` for one request.
+* **insert** — splice a prefilled request into a slot of a *running*
+  batch state: KV caches are written at the slot's batch row, spectral
+  stream caches are re-phased to the running window
+  (:func:`repro.models.layers.spectral.spectral_stream_rephase`), and the
+  slot's token/length/done rows are reset.  Each slot keeps its OWN
+  timeline — ``decode_step`` takes the (B,) length vector as per-slot
+  positions — so no position shifting is needed.
+* **generate** — ONE ``lax.scan`` over steps with a single compiled step
+  function: decode, sample, per-slot EOS masking.  Finished slots emit
+  ``eos_id`` and their caches/lengths/last-token are frozen (the step still
+  computes them — batch lockstep — but the results are discarded), so a
+  finished slot's state is bit-identical until something is inserted over
+  it.  No per-token Python, no retracing, and zero new FFT plans after the
+  first trace — every spectral flush reuses the cached overlap-save plan.
+
+``Engine.generate`` keeps the original whole-batch convenience API on top
+of the three phases.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import model as model_lib
+from repro.models import stack as stack_lib
+from repro.models.layers import spectral as spec_lib
 from repro.serving.sampling import sample
 
-__all__ = ["ServeConfig", "Engine"]
+__all__ = ["ServeConfig", "Engine", "DecodeState", "PrefillResult"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,8 +46,39 @@ class ServeConfig:
     max_new: int = 32
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 0.0
     eos_id: int = 3
     seed: int = 0
+
+
+class PrefillResult(NamedTuple):
+    """One prefilled request, ready to insert: decode-layout caches (batch
+    = the request's own batch, usually 1), first sampled token and prompt
+    length per row."""
+
+    caches: Any
+    token: jax.Array   # (B,) int32
+    length: jax.Array  # (B,) int32 — next position to write
+
+
+class DecodeState(NamedTuple):
+    """The running batch: one row per serving slot."""
+
+    caches: Any
+    tokens: jax.Array   # (B,) int32 — last token per slot (next step's input)
+    lengths: jax.Array  # (B,) int32 — per-slot next write position
+    done: jax.Array     # (B,) bool — finished (or never-filled) slots
+    key: jax.Array      # sampling PRNG key
+
+
+def _select_rows(done, old, new):
+    """Per-leaf freeze: keep ``old``'s batch rows where ``done``.  Cache
+    leaves are stacked (repeats, batch, ...); leaves without a batch axis
+    (the spectral stream phase, ring counters) advance globally."""
+    if getattr(new, "ndim", 0) >= 2 and new.shape[1] == done.shape[0]:
+        m = done.reshape((1, -1) + (1,) * (new.ndim - 2))
+        return jnp.where(m, old, new)
+    return new
 
 
 class Engine:
@@ -34,32 +86,163 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
-        self._decode = jax.jit(self._decode_fn)
+        self.unit = stack_lib.find_unit(cfg.pattern())
+        self._prefill = jax.jit(self._prefill_fn, static_argnames=("max_len",))
+        self._insert = jax.jit(self._insert_fn)
+        self._generate = jax.jit(self._generate_fn, static_argnames=("steps",))
 
-    def _decode_fn(self, params, tokens, caches, t, key):
-        logits, caches = model_lib.decode_step(params, tokens, caches, t, self.cfg)
-        key, sub = jax.random.split(key)
-        nxt = sample(
-            sub, logits, temperature=self.scfg.temperature, top_k=self.scfg.top_k
+    def _sample(self, key, logits):
+        return sample(
+            key,
+            logits,
+            temperature=self.scfg.temperature,
+            top_k=self.scfg.top_k,
+            top_p=self.scfg.top_p,
         )
-        return nxt, caches, key
+
+    # -- prefill phase -----------------------------------------------------
+
+    def _prefill_fn(self, params, prompts, key, *, max_len):
+        b, s = prompts.shape
+        logits, caches = model_lib.prefill(params, {"tokens": prompts}, self.cfg)
+        caches = model_lib.prepare_decode_caches(caches, self.cfg, s, max_len)
+        token = self._sample(key, logits)
+        return PrefillResult(
+            caches=caches,
+            token=token.astype(jnp.int32),
+            length=jnp.full((b,), s, jnp.int32),
+        )
+
+    def prefill(self, prompts, *, max_len: int, key) -> PrefillResult:
+        """Run one request's prompt (B, S) → :class:`PrefillResult` whose
+        caches are laid out for a ``max_len``-slot decode state."""
+        return self._prefill(self.params, jnp.asarray(prompts, jnp.int32), key,
+                             max_len=max_len)
+
+    # -- batch state -------------------------------------------------------
+
+    def init_state(self, batch: int, max_len: int, key=None) -> DecodeState:
+        """An empty ``batch``-slot decode state (every slot done)."""
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        caches = model_lib.cache_init(self.cfg, batch, max_len, dtype=dtype)
+        return DecodeState(
+            caches=caches,
+            tokens=jnp.zeros((batch,), jnp.int32),
+            lengths=jnp.zeros((batch,), jnp.int32),
+            done=jnp.ones((batch,), bool),
+            key=key if key is not None else jax.random.PRNGKey(self.scfg.seed),
+        )
+
+    # -- insert phase ------------------------------------------------------
+
+    def _insert_fn(self, params, state, pres, slot):
+        nslots = state.tokens.shape[0]
+
+        def write(buf, new):
+            if (
+                getattr(buf, "ndim", 0) >= 2
+                and getattr(new, "ndim", 0) == buf.ndim
+                and buf.shape[0] == new.shape[0]
+                and buf.shape[1] == nslots
+                and new.shape[1] <= nslots
+                and buf.shape[2:] == new.shape[2:]
+            ):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    buf, new.astype(buf.dtype), slot, axis=1
+                )
+            return buf  # batchless leaves (phase / ring counters): keep live
+
+        caches = []
+        for i, (kind, live, new) in enumerate(
+            zip(self.unit, state.caches, pres.caches)
+        ):
+            if isinstance(live, spec_lib.SpectralStreamCache):
+                # Re-align the fresh request to the running window phase;
+                # filt is stacked over repeats like the cache → vmap.
+                phase = live.phase.reshape(-1)[0]
+                filt = params["stack"]["unit"][f"b{i}"]["mixer"]["filt"]
+                new = jax.vmap(
+                    lambda f, c: spec_lib.spectral_stream_rephase(
+                        f, c, phase, cfg=self.cfg
+                    )
+                )(filt, new)
+            caches.append(jax.tree.map(write, live, new))
+
+        def put(vec, val):
+            return jax.lax.dynamic_update_slice(vec, val.astype(vec.dtype), (slot,))
+
+        return DecodeState(
+            caches=caches,
+            tokens=put(state.tokens, pres.token),
+            lengths=put(state.lengths, pres.length),
+            done=put(state.done, pres.token == self.scfg.eos_id),
+            key=state.key,
+        )
+
+    def insert(self, state: DecodeState, pres: PrefillResult, slot) -> DecodeState:
+        """Splice ``pres`` (batch 1 — or k consecutive slots) into ``state``
+        starting at ``slot``.  Requires stream-mode spectral caches: the
+        ring layout's shared step counter cannot represent per-slot
+        timelines."""
+        for live in state.caches:
+            if isinstance(live, spec_lib.SpectralCache):
+                raise ValueError(
+                    "insert needs spectral_decode_mode='stream' (the ring "
+                    "cache keeps one global step counter and cannot join a "
+                    "running batch)"
+                )
+        return self._insert(self.params, state, pres, jnp.asarray(slot, jnp.int32))
+
+    # -- generate phase ----------------------------------------------------
+
+    def _generate_fn(self, params, state, *, steps):
+        eos = self.scfg.eos_id
+
+        def step(st, _):
+            logits, new_caches = model_lib.decode_step(
+                params, st.tokens, st.caches, st.lengths, self.cfg
+            )
+            key, sub = jax.random.split(st.key)
+            nxt = self._sample(sub, logits)
+            emit = jnp.where(st.done, jnp.int32(eos), nxt).astype(jnp.int32)
+            caches = jax.tree.map(
+                lambda old, new: _select_rows(st.done, old, new),
+                st.caches,
+                new_caches,
+            )
+            lengths = st.lengths + jnp.where(st.done, 0, 1).astype(jnp.int32)
+            tokens = jnp.where(st.done, st.tokens, emit)
+            return (
+                DecodeState(caches, tokens, lengths, st.done | (emit == eos), key),
+                emit,
+            )
+
+        state, toks = jax.lax.scan(step, state, None, length=steps)
+        return state, jnp.moveaxis(toks, 0, 1)  # (B, steps)
+
+    def decode(self, state: DecodeState, steps: int):
+        """Run ``steps`` decode steps as one compiled scan.  Returns
+        (new_state, tokens (B, steps) int32 — ``eos_id`` for done slots)."""
+        return self._generate(self.params, state, steps=steps)
+
+    # -- whole-batch convenience (the original API) ------------------------
 
     def generate(self, prompts: jax.Array, *, max_new: Optional[int] = None):
         """prompts: (B, S) int32 → (B, max_new) int32 generated tokens."""
         b, s = prompts.shape
         max_new = max_new or self.scfg.max_new
-        batch = {"tokens": prompts}
-        logits, caches = model_lib.prefill(self.params, batch, self.cfg)
-        caches = model_lib.prepare_decode_caches(caches, self.cfg, s, s + max_new)
         key = jax.random.PRNGKey(self.scfg.seed)
         key, sub = jax.random.split(key)
-        nxt = sample(sub, logits, temperature=self.scfg.temperature, top_k=self.scfg.top_k)
-        out = [nxt]
-        done = nxt == self.scfg.eos_id
-        for i in range(max_new - 1):
-            t = jnp.asarray(s + i, jnp.int32)
-            nxt, caches, key = self._decode(self.params, nxt, caches, t, key)
-            nxt = jnp.where(done, self.scfg.eos_id, nxt)
-            done = done | (nxt == self.scfg.eos_id)
-            out.append(nxt)
-        return jnp.stack(out, axis=1)
+        pres = self.prefill(prompts, max_len=s + max_new, key=sub)
+        first = pres.token
+        if max_new == 1:
+            return first[:, None]
+        state = DecodeState(
+            caches=pres.caches,
+            tokens=first,
+            lengths=pres.length,
+            done=first == self.scfg.eos_id,
+            key=key,
+        )
+        _, toks = self.decode(state, max_new - 1)
+        return jnp.concatenate([first[:, None], toks], axis=1)

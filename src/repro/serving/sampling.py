@@ -1,4 +1,12 @@
-"""Sampling: greedy / temperature / top-k over final logits."""
+"""Sampling: greedy / temperature / top-k / top-p over final logits.
+
+``top_k`` and ``top_p`` share one mechanism: compute a per-row cutoff logit
+and mask everything strictly below it to −∞ (:func:`_mask_below`).  top-k's
+cutoff is the k-th largest logit; top-p's (nucleus) is the smallest logit
+whose inclusion is still needed to reach cumulative probability ``top_p``
+(so at least one token always survives).  Both filters compose: k first,
+then p over what k kept.
+"""
 
 from __future__ import annotations
 
@@ -7,14 +15,34 @@ import jax.numpy as jnp
 
 __all__ = ["sample"]
 
+NEG_INF = -1e30
 
-def sample(key, logits, *, temperature: float = 0.0, top_k: int = 0):
+
+def _mask_below(logits, cutoff):
+    """Mask logits strictly below the per-row ``cutoff`` (..., 1) to −∞."""
+    return jnp.where(logits < cutoff, NEG_INF, logits)
+
+
+def _nucleus_cutoff(logits, top_p: float):
+    """Per-row nucleus cutoff: keep the smallest set of top tokens whose
+    probability mass reaches ``top_p``.  A token is kept when the mass of
+    strictly-better tokens is still < top_p — the argmax always qualifies."""
+    sorted_desc = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    mass_before = jnp.cumsum(probs, axis=-1) - probs
+    kept = (mass_before < top_p).sum(axis=-1)  # ≥ 1 per row
+    return jnp.take_along_axis(sorted_desc, kept[..., None] - 1, axis=-1)
+
+
+def sample(key, logits, *, temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 0.0):
     """logits: (B, V) float32 → (B,) int32 token ids."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k:
         vals, _ = jax.lax.top_k(logits, top_k)
-        cutoff = vals[..., -1:]
-        logits = jnp.where(logits < cutoff, -1e30, logits)
+        logits = _mask_below(logits, vals[..., -1:])
+    if top_p and top_p < 1.0:
+        logits = _mask_below(logits, _nucleus_cutoff(logits, top_p))
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,172 @@
+"""Stateful serving sessions over the three-phase decode engine.
+
+:class:`ServeSession` is the host-side orchestration layer: it owns a
+fixed pool of batch slots (one :class:`~repro.serving.engine.DecodeState`),
+admits requests into free slots (prefill → insert), and advances the whole
+pool with compiled ``lax.scan`` generate calls.  Only admission runs
+Python-per-request; token generation never leaves the compiled step
+function, and every spectral flush inside it reuses the overlap-save plan
+cached at trace time (``core.fft.plan_log()`` shows zero new plans once
+the session is warm — benchmarks assert this).
+
+Per-phase wall-clock is accumulated in ``session.phase_s`` (maxtext
+decode-microbenchmark style: prefill / insert / generate timed
+separately).  :func:`sweep_once` is the single measurement path shared by
+``benchmarks/bench_serve.py`` and the ``repro.launch.serve`` CLI, so the
+numbers they print are the same numbers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.engine import DecodeState, Engine
+
+__all__ = ["ServeSession", "sweep_once"]
+
+
+class ServeSession:
+    """A slot pool serving requests through prefill / insert / generate.
+
+    Usage::
+
+        sess = ServeSession(engine, slots=4, max_len=128)
+        s0 = sess.submit([5, 17, 3, 20])   # prefill + insert (slot 0)
+        s1 = sess.submit(other_prompt)     # joins the running batch
+        sess.run(32)                       # one compiled scan, all slots
+        sess.output(s0)                    # generated ids incl. first token
+    """
+
+    def __init__(self, engine: Engine, *, slots: int, max_len: int, seed: int = 0):
+        self.engine = engine
+        self.slots = slots
+        self.max_len = max_len
+        self.state: DecodeState = engine.init_state(slots, max_len)
+        self._key = jax.random.PRNGKey(seed + 1)  # prefill sampling stream
+        self._out: List[List[int]] = [[] for _ in range(slots)]
+        self._live = [False] * slots  # host mirror of per-slot "still emitting"
+        self.phase_s = {"prefill": 0.0, "insert": 0.0, "generate": 0.0}
+        self.counts = {"requests": 0, "steps": 0, "tokens": 0}
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.slots) if not self._live[i]]
+
+    def submit(self, prompt, slot: Optional[int] = None) -> int:
+        """Prefill ``prompt`` (S,) and insert it into a free slot (or the
+        given one).  Returns the slot index; the sampled first token is
+        already part of :meth:`output`."""
+        if slot is None:
+            free = self.free_slots()
+            if not free:
+                raise RuntimeError("no free slot; run() until one finishes")
+            slot = free[0]
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
+        if prompt.shape[1] > self.max_len:
+            raise ValueError(f"prompt length {prompt.shape[1]} > max_len {self.max_len}")
+        self._key, sub = jax.random.split(self._key)
+
+        t0 = time.perf_counter()
+        pres = self.engine.prefill(prompt, max_len=self.max_len, key=sub)
+        jax.block_until_ready(pres)
+        t1 = time.perf_counter()
+        self.state = self.engine.insert(self.state, pres, slot)
+        jax.block_until_ready(self.state.done)
+        t2 = time.perf_counter()
+
+        self.phase_s["prefill"] += t1 - t0
+        self.phase_s["insert"] += t2 - t1
+        self.counts["requests"] += 1
+        first = int(pres.token[0])
+        self._out[slot] = [first]
+        self._live[slot] = first != self.engine.scfg.eos_id
+        self.counts["tokens"] += 1
+        return slot
+
+    def run(self, steps: int):
+        """Advance every slot ``steps`` tokens in ONE compiled scan.
+        Returns the raw (slots, steps) emission matrix (``eos_id`` filler
+        for slots that are done)."""
+        t0 = time.perf_counter()
+        self.state, toks = self.engine.decode(self.state, steps)
+        toks.block_until_ready()
+        self.phase_s["generate"] += time.perf_counter() - t0
+        self.counts["steps"] += steps
+
+        eos = self.engine.scfg.eos_id
+        host = jax.device_get(toks)
+        for b in range(self.slots):
+            for s in range(steps):
+                if not self._live[b]:
+                    break
+                t = int(host[b, s])
+                self._out[b].append(t)
+                self.counts["tokens"] += 1
+                if t == eos:
+                    self._live[b] = False
+        return toks
+
+    def output(self, slot: int) -> List[int]:
+        """Generated ids for ``slot`` (first sampled token onward, EOS
+        included when emitted)."""
+        return list(self._out[slot])
+
+    def stats(self) -> dict:
+        gen = self.phase_s["generate"]
+        return {
+            **{f"{k}_s": round(v, 6) for k, v in self.phase_s.items()},
+            **self.counts,
+            "tok_per_s": round(self.counts["tokens"] / gen, 2) if gen > 0 else None,
+        }
+
+
+def sweep_once(
+    engine: Engine,
+    *,
+    batch: int,
+    prompt_len: int,
+    max_new: int,
+    warmup: int = 1,
+    seed: int = 0,
+) -> dict:
+    """One measured serving sweep: ``batch`` requests of ``prompt_len``
+    tokens admitted one by one (prefill + insert), then ``max_new - 1``
+    scan steps.  ``warmup`` untimed passes absorb compilation.  Returns a
+    flat dict of per-phase seconds and throughput — the row format of
+    ``BENCH_serve.json`` and of the CLI's table."""
+    max_len = prompt_len + max_new
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(seed), (batch, prompt_len), 4, engine.cfg.vocab_size
+    )
+
+    def one_pass():
+        sess = ServeSession(engine, slots=batch, max_len=max_len, seed=seed)
+        for b in range(batch):
+            sess.submit(prompts[b], slot=b)
+        if max_new > 1:
+            sess.run(max_new - 1)
+        return sess
+
+    for _ in range(warmup):
+        one_pass()
+    sess = one_pass()
+
+    st = sess.stats()
+    gen = st["generate_s"]
+    total = st["prefill_s"] + st["insert_s"] + gen
+    decoded = batch * max(max_new - 1, 0)
+    return {
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "max_new": max_new,
+        "prefill_s": st["prefill_s"],
+        "insert_s": st["insert_s"],
+        "generate_s": gen,
+        "prefill_s_per_req": round(st["prefill_s"] / batch, 6),
+        "insert_s_per_req": round(st["insert_s"] / batch, 6),
+        "decode_tok_per_s": round(decoded / gen, 2) if gen > 0 else None,
+        "e2e_tok_per_s": round(batch * max_new / total, 2) if total > 0 else None,
+    }

@@ -84,6 +84,68 @@ def test_scan_equals_unrolled_stack():
     assert float(jnp.abs(ls - lu).max()) < 1e-4
 
 
+@pytest.mark.parametrize("sp", [3, 8, 11, 16])
+def test_spectral_stream_prefill_lengths(sp):
+    """Streamed spectral decode after prefills that straddle the chunk /
+    filter boundaries: Sp < Lf (zero-padded history), Sp == chunk (flush
+    boundary), ragged tail, and multiple whole chunks.  The spectral case
+    has Lf = 8 and stream chunk C = 8, so 3 / 8 / 11 / 16 hit each regime;
+    8 decode steps always cross at least one in-flight flush.  float32 so
+    the comparison measures the streaming math, not bf16 rounding."""
+    import dataclasses
+
+    cfg = dataclasses.replace(CASES["spectral"], compute_dtype="float32")
+    S = sp + 8
+    params, _ = M.init_unzipped(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, cfg.vocab_size)
+    full_logits, _ = M.logits_fn(params, {"tokens": toks, "targets": toks}, cfg)
+    lp, caches = M.prefill(params, {"tokens": toks[:, :sp]}, cfg)
+    caches = M.prepare_decode_caches(caches, cfg, sp, S)
+    errs = [float(jnp.abs(lp - full_logits[:, sp - 1]).max())]
+    for t in range(sp, S):
+        lg, caches = M.decode_step(
+            params, toks[:, t], caches, jnp.asarray(t, jnp.int32), cfg
+        )
+        errs.append(float(jnp.abs(lg - full_logits[:, t]).max()))
+    assert max(errs) < 1e-3, f"Sp={sp}: stream decode diverges ({max(errs)})"
+
+
+def test_spectral_stream_past_fused_regime():
+    """A prompt longer than FUSED_MAX: prefill must route the mixer conv
+    through overlap-save (no plan bigger than the fused ceiling) and the
+    carried stream state must still continue the sequence to 1e-3."""
+    from repro.core import fft as fft_lib
+    from repro.core.limits import FUSED_MAX
+    from repro.models.layers import spectral as spec_lib
+    from repro.utils.params import unzip
+
+    cfg = ModelConfig(
+        family="dense", num_layers=2, d_model=2, num_heads=1, num_kv_heads=1,
+        d_ff=4, vocab_size=16, block_pattern=("spectral", "attn"),
+        spectral_filter_len=32, compute_dtype="float32",
+    )
+    c, _ = spec_lib.stream_grain(cfg)
+    s, t_steps = FUSED_MAX + 64, c + 2
+    params, _ = unzip(spec_lib.spectral_init(jax.random.PRNGKey(0), cfg, jnp.float32))
+    x = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(1), (1, s + t_steps, cfg.d_model), jnp.float32
+    )
+    ref = spec_lib.spectral_forward(params, x, cfg=cfg)
+    fft_lib.clear_plan_log()
+    _, cache = spec_lib.spectral_forward(params, x[:, :s], cfg=cfg, return_cache=True)
+    assert all(spec.n <= FUSED_MAX for spec, _ in fft_lib.plan_log()), (
+        "prefill past FUSED_MAX planned a fused-regime-sized FFT"
+    )
+    step = jax.jit(
+        lambda xt, cc: spec_lib.spectral_stream_decode(params, xt, cc, cfg=cfg)
+    )
+    errs = []
+    for i in range(t_steps):
+        y, cache = step(x[:, s + i : s + i + 1], cache)
+        errs.append(float(jnp.abs(y - ref[:, s + i : s + i + 1]).max()))
+    assert max(errs) < 1e-3, f"stream decode past fused regime: {max(errs)}"
+
+
 def test_spectral_mixer_flag_trains_and_decodes():
     """The paper-integration ablation: use_spectral_mixer alternates FFT
     long-conv mixing with attention and must stay decode-exact."""

@@ -1,0 +1,189 @@
+"""Serving subsystem: phases, EOS discipline, sampling, plan discipline.
+
+Covers the three-phase engine (prefill / insert / generate), the
+ServeSession slot pool, nucleus sampling, and the serving-specific
+invariants: finished slots freeze (caches and emissions), a request
+inserted into a RUNNING batch decodes exactly like a solo run (the
+spectral stream re-phasing path), stream mode equals the ring-buffer
+oracle, and a warm generate loop creates zero new FFT plans."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import fft as fft_lib
+from repro.models import model as M
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.sampling import sample
+from repro.serving.spectral_serve import ServeSession, sweep_once
+
+CFG = ModelConfig(
+    family="dense", num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=256, block_pattern=("spectral", "attn"),
+    spectral_filter_len=8, compute_dtype="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    p, _ = M.init_unzipped(jax.random.PRNGKey(0), CFG)
+    return p
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return jax.random.randint(jax.random.PRNGKey(1), (2, 10), 4, CFG.vocab_size)
+
+
+def _greedy(params, max_new=8, **cfg_overrides):
+    cfg = dataclasses.replace(CFG, **cfg_overrides) if cfg_overrides else CFG
+    return Engine(cfg, params, ServeConfig(max_new=max_new))
+
+
+# -- sampling ---------------------------------------------------------------
+
+
+def test_top_p_restricts_support_and_matches_distribution():
+    """top_p=0.7 over p=[.5,.3,.15,.05] keeps exactly {0,1}; renormalized
+    P(0) = .5/.8 = .625.  Seeded frequency check over 4000 draws."""
+    logits = jnp.log(jnp.asarray([0.5, 0.3, 0.15, 0.05]))[None, :]
+    keys = jax.random.split(jax.random.PRNGKey(7), 4000)
+    draws = jax.vmap(
+        lambda k: sample(k, logits, temperature=1.0, top_p=0.7)[0]
+    )(keys)
+    counts = np.bincount(np.asarray(draws), minlength=4)
+    assert counts[2] == 0 and counts[3] == 0, "tokens outside the nucleus sampled"
+    freq0 = counts[0] / counts.sum()
+    assert abs(freq0 - 0.625) < 0.05, freq0
+
+
+def test_top_p_keeps_argmax():
+    logits = jnp.log(jnp.asarray([0.9, 0.05, 0.03, 0.02]))[None, :]
+    keys = jax.random.split(jax.random.PRNGKey(3), 64)
+    draws = jax.vmap(
+        lambda k: sample(k, logits, temperature=1.0, top_p=1e-6)[0]
+    )(keys)
+    assert (np.asarray(draws) == 0).all(), "tiny top_p must degenerate to argmax"
+
+
+def test_top_k_and_top_p_compose():
+    """k filters first, p renormalizes over the survivors."""
+    logits = jnp.log(jnp.asarray([0.4, 0.3, 0.2, 0.1]))[None, :]
+    keys = jax.random.split(jax.random.PRNGKey(5), 512)
+    draws = jax.vmap(
+        lambda k: sample(k, logits, temperature=1.0, top_k=3, top_p=0.5)[0]
+    )(keys)
+    # k=3 drops token 3; within {.4,.3,.2}/.9 the nucleus at .5 keeps {0,1}
+    assert set(np.asarray(draws).tolist()) <= {0, 1}
+
+
+# -- EOS discipline ---------------------------------------------------------
+
+
+def test_eos_freezes_slot_and_pads_output(params, prompts):
+    """Once a slot emits EOS, every later emission is EOS and the slot's
+    cache rows stop changing (including the very first sampled token)."""
+    free = Engine(CFG, params, ServeConfig(max_new=10, eos_id=-1))
+    ref = np.asarray(free.generate(prompts))  # eos_id=-1: nothing matches
+    eos = int(ref[0, 3])  # force row 0 to finish after 4 tokens
+    eng = Engine(CFG, params, ServeConfig(max_new=10, eos_id=eos))
+    out = np.asarray(eng.generate(prompts))
+    assert out[0, 3] == eos
+    assert (out[0, 4:] == eos).all(), "emissions after EOS must be EOS"
+    # tokens before the stop are unaffected by the EOS rule
+    assert (out[0, :4] == ref[0, :4]).all()
+
+    # cache rows of a done slot are bit-frozen across further decode steps
+    key = jax.random.PRNGKey(0)
+    key, sub = jax.random.split(key)
+    pres = eng.prefill(prompts, max_len=30, key=sub)
+    from repro.serving.engine import DecodeState
+
+    state = DecodeState(
+        caches=pres.caches, tokens=pres.token, lengths=pres.length,
+        done=pres.token == eos, key=key,
+    )
+    state, _ = eng.decode(state, 5)  # row 0 finishes at step 3
+    frozen, _ = eng.decode(state, 3)
+    done = np.asarray(frozen.done)
+    assert done[0], "row 0 should be done"
+    for old, new in zip(jax.tree.leaves(state.caches), jax.tree.leaves(frozen.caches)):
+        if old.ndim >= 2 and old.shape[1] == 2:  # batch-axis leaves
+            np.testing.assert_array_equal(
+                np.asarray(old[:, 0]), np.asarray(new[:, 0])
+            )
+    assert int(frozen.lengths[0]) == int(state.lengths[0])
+
+
+def test_first_token_eos(params, prompts):
+    """A prompt whose FIRST sampled token is EOS yields all-EOS output —
+    the first token is subject to the same masking as the rest."""
+    free = Engine(CFG, params, ServeConfig(max_new=6, eos_id=-1))
+    first = int(np.asarray(free.generate(prompts, max_new=1))[0, 0])
+    eng = Engine(CFG, params, ServeConfig(max_new=6, eos_id=first))
+    out = np.asarray(eng.generate(prompts))
+    assert (out[0] == first).all()
+
+
+# -- phases -----------------------------------------------------------------
+
+
+def test_session_matches_whole_batch_generate(params, prompts):
+    eng = _greedy(params)
+    ref = np.asarray(eng.generate(prompts))
+    sess = ServeSession(eng, slots=2, max_len=18)
+    s0 = sess.submit(prompts[0])
+    s1 = sess.submit(prompts[1])
+    sess.run(7)
+    assert sess.output(s0) == ref[0].tolist()
+    assert sess.output(s1) == ref[1].tolist()
+
+
+def test_insert_joins_running_batch(params, prompts):
+    """A request admitted AFTER the batch has been decoding (spectral
+    stream re-phasing) produces exactly the tokens it would produce solo."""
+    eng = _greedy(params)
+    ref = np.asarray(eng.generate(prompts))
+    sess = ServeSession(eng, slots=2, max_len=18)
+    s0 = sess.submit(prompts[0])
+    sess.run(3)  # slot 0 runs alone; global stream phase advances
+    s1 = sess.submit(prompts[1])  # joins mid-stream at nonzero phase
+    sess.run(7)
+    assert sess.output(s0)[:8] == ref[0].tolist()
+    assert sess.output(s1)[:8] == ref[1].tolist()
+
+
+def test_insert_requires_stream_mode(params, prompts):
+    eng = _greedy(params, spectral_decode_mode="ring")
+    key = jax.random.PRNGKey(0)
+    pres = eng.prefill(prompts[:1], max_len=18, key=key)
+    state = eng.init_state(2, 18)
+    with pytest.raises(ValueError, match="stream"):
+        eng.insert(state, pres, 0)
+
+
+def test_stream_equals_ring_oracle(params, prompts):
+    a = np.asarray(_greedy(params).generate(prompts))
+    b = np.asarray(_greedy(params, spectral_decode_mode="ring").generate(prompts))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_generate_contract(params, prompts):
+    """Back-compat: (B, S) int32 in → (B, max_new) int32 out."""
+    out = _greedy(params, max_new=5).generate(prompts)
+    assert out.shape == (2, 5) and out.dtype == jnp.int32
+
+
+def test_zero_new_plans_when_warm(params):
+    """After one warm sweep, a full prefill+insert+generate pass creates
+    zero new FFT plans — every spectral flush reuses the cached plan."""
+    eng = _greedy(params)
+    sweep_once(eng, batch=2, prompt_len=10, max_new=6, warmup=0)
+    fft_lib.clear_plan_log()
+    r = sweep_once(eng, batch=2, prompt_len=10, max_new=6, warmup=0)
+    assert len(fft_lib.plan_log()) == 0, fft_lib.plan_log()
+    assert r["decode_tok_per_s"] is not None
