@@ -13,6 +13,7 @@ import sys
 
 from benchmarks import (
     bench_fftconv,
+    bench_pfft,
     bench_roofline,
     bench_sar,
     bench_serve,
@@ -27,6 +28,7 @@ SUITES = {
     "tuning": bench_tuning.main,     # autotuned vs fixed-heuristic blocks
     "roofline": bench_roofline.main, # dry-run roofline summary
     "serve": bench_serve.main,       # prefill/insert/generate phase timings
+    "pfft": bench_pfft.main,         # distributed pencil scaling (fake devices)
 }
 
 #: Suites with a fast-path smoke mode; the rest are import-checked only.
@@ -40,6 +42,8 @@ SMOKE_SUITES = {
     # asserts streamed == one-shot numerics + zero-new-plan discipline
     # before timing a small serving sweep
     "serve": lambda: bench_serve.main(smoke=True),
+    # one 16-fake-device point: numerics + packed collective counts
+    "pfft": lambda: bench_pfft.main(smoke=True),
 }
 
 

@@ -26,6 +26,7 @@ from typing import Optional
 __all__ = [
     "HW",
     "V5E",
+    "COLLECTIVE_LAUNCH_S",
     "collective_bytes",
     "roofline_terms",
     "model_flops",
@@ -33,8 +34,17 @@ __all__ = [
     "fft_pass_report",
     "fft2_fallback_report",
     "conv_report",
+    "pencil_report",
     "prune_candidates",
 ]
+
+#: Fixed per-collective launch/dispatch charge (seconds).  Wire bytes are
+#: identical whether the split-complex pair rides one stacked all-to-all or
+#: two, so without a launch term the model could never prefer packing; 10 µs
+#: is the right order for a TPU ICI collective dispatch and is deliberately
+#: hardware-vague — it separates "fewer collectives" from "same bytes", not
+#: v5e from v5p.
+COLLECTIVE_LAUNCH_S = 10e-6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,6 +329,119 @@ def conv_report(L: int, Lh: int, batch: int = 1, hw: HW = V5E, block=None) -> di
         "one_shot": one,
         "overlap_save": osd,
         "bytes_ratio": one_bytes / os_bytes if os_bytes else float("inf"),
+    }
+
+
+def pencil_report(
+    n: int,
+    d: int,
+    batch: int = 1,
+    *,
+    n1: Optional[int] = None,
+    n2: Optional[int] = None,
+    pack: bool = True,
+    chunks: int = 1,
+    natural_order: bool = True,
+    hw: HW = V5E,
+) -> dict:
+    """Modeled cost decomposition of the distributed pencil FFT.
+
+    The paper's argument one level up: across a pod the slow tier is the
+    interconnect, and the pencil schedule's cost is its all-to-all
+    transposes against the local column/row FFT passes.  This report
+    charges both sides explicitly so the distributed tuner
+    (:meth:`repro.core.tuning.TuningSpace.for_pencil`) can trade them:
+
+    * per-step **comm bytes**: every transpose moves the device's whole
+      slab, ``(d-1)/d`` of it over the wire;
+    * **local HBM bytes**: the n1 column program (at batch·q pencils), the
+      twiddle multiply (slab read+write + the per-device table), the n2 row
+      program (at batch·p pencils), and the natural-order reorder;
+    * a fixed :data:`COLLECTIVE_LAUNCH_S` per collective *call* — what
+      packing the split-complex pair into one stacked all-to-all halves,
+      and what strip-mining into ``chunks`` pieces pays more of;
+    * the pipelined middle: with ``chunks=K`` the two inner transposes
+      overlap the column FFT + twiddle chunk-by-chunk, so the modeled
+      middle is ``cc + fc + (K-1)·max(cc, fc)`` (per-chunk comm ``cc``,
+      per-chunk compute ``fc``) instead of their sum.
+
+    ``modeled_s`` is the config's total; ``serial_s`` is the unpacked
+    ``K=1`` baseline of the same factorization, so ``overlap_win`` is
+    directly the speedup the tuner is claiming.
+    """
+    from repro.core import plan as plan_lib  # local: analysis stays lazy
+
+    if n1 is None or n2 is None:
+        from repro.core import distributed as dist  # lazy: avoids cycle
+
+        n1, n2 = dist.pencil_factors(n, d)
+    if n1 * n2 != n:
+        raise ValueError(f"pencil factors {n1}x{n2} != n={n}")
+    p, q = n1 // max(d, 1), n2 // max(d, 1)
+    f32, planes = 4, 2
+    slab = batch * (n // max(d, 1))  # elements per plane per device
+    slab_bytes = slab * planes * f32
+    wire_step = slab_bytes * (d - 1) / max(d, 1)  # one transpose, per device
+    a2a_steps = (3 if natural_order else 2) if d > 1 else 0
+    K = max(1, chunks) if (pack and d > 1) else 1
+    # Collective call count: the two inner transposes are K calls each, the
+    # natural-order reorder is always one packed call; unpacked pays two
+    # calls (xr, xi) per step, serially.
+    if d <= 1:
+        a2a_calls = 0
+    elif pack:
+        a2a_calls = 2 * K + (1 if natural_order else 0)
+    else:
+        a2a_calls = 2 * a2a_steps
+
+    fft1_bytes = plan_lib.program_hbm_bytes(
+        plan_lib.plan_fft(n1).passes, batch * q
+    )
+    fft2_bytes = plan_lib.program_hbm_bytes(
+        plan_lib.plan_fft(n2).passes, batch * p
+    )
+    twiddle_bytes = 2 * slab_bytes + n1 * q * planes * f32  # slab r/w + table
+    reorder_bytes = 2 * slab_bytes if (natural_order and d > 1) else 0
+    local_bytes = fft1_bytes + twiddle_bytes + fft2_bytes + reorder_bytes
+
+    t_step = wire_step / hw.link_bw
+    t_mid_compute = (fft1_bytes + twiddle_bytes) / hw.hbm_bw
+    if d > 1:
+        cc, fc = 2 * t_step / K, t_mid_compute / K
+        t_middle = cc + fc + (K - 1) * max(cc, fc)
+    else:
+        t_middle = t_mid_compute
+    t_tail = fft2_bytes / hw.hbm_bw + reorder_bytes / hw.hbm_bw
+    if natural_order and d > 1:
+        t_tail += t_step
+    modeled = t_middle + t_tail + a2a_calls * COLLECTIVE_LAUNCH_S
+    serial = (
+        a2a_steps * t_step
+        + local_bytes / hw.hbm_bw
+        + (2 * a2a_steps) * COLLECTIVE_LAUNCH_S
+    )
+    return {
+        "n": n,
+        "d": d,
+        "batch": batch,
+        "n1": n1,
+        "n2": n2,
+        "pack": pack,
+        "chunks": K,
+        "natural_order": natural_order,
+        "a2a_steps": a2a_steps,
+        "a2a_calls": a2a_calls,
+        "comm_bytes_per_step": wire_step,
+        "comm_bytes_total": wire_step * a2a_steps,
+        "fft1_bytes": fft1_bytes,
+        "fft2_bytes": fft2_bytes,
+        "twiddle_bytes": twiddle_bytes,
+        "local_hbm_bytes": local_bytes,
+        "comm_s": a2a_steps * t_step,
+        "memory_s": local_bytes / hw.hbm_bw,
+        "modeled_s": modeled,
+        "serial_s": serial,
+        "overlap_win": serial / modeled if modeled else float("inf"),
     }
 
 

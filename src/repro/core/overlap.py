@@ -327,6 +327,14 @@ class StreamingConv:
     strip ingest genuinely prefer different blocks (chunks shorter than the
     heuristic block waste the unfilled step on every call).  Without a hint
     the measurement uses a long-ingest stand-in of 8 heuristic blocks.
+
+    ``spmd=True`` makes the block pick cache- and measurement-free
+    (:func:`repro.core.tuning.modeled_block`): every host of a
+    multi-process mesh derives the identical block from the shape alone,
+    so a ``StreamingConv`` built inside per-host setup code stays safe to
+    close over in a ``shard_map`` program.  A per-host cache hit or timing
+    run could diverge across hosts and desynchronize collective shapes —
+    the same rule :func:`repro.core.distributed.pconv_os_sharded` follows.
     """
 
     def __init__(
@@ -337,15 +345,23 @@ class StreamingConv:
         backend: Optional[str] = None,
         tune: Optional[str] = None,
         chunk_hint: Optional[int] = None,
+        spmd: bool = False,
     ):
         self.h = jnp.asarray(h, jnp.float32)
         self.filter_len = int(self.h.shape[-1])
         self.overlap = self.filter_len - 1
         self.chunk_hint = chunk_hint
         L_tune = chunk_hint or 8 * pick_block(self.filter_len)
-        self.block = _resolve_block(
-            self.filter_len, block, L_tune, 1, backend, tune, chunk=chunk_hint
-        )
+        if spmd and block is None:
+            from repro.core import tuning  # lazy: tuning measures through here
+
+            self.block = tuning.modeled_block(
+                L_tune, self.filter_len, 1, backend, chunk=chunk_hint
+            )
+        else:
+            self.block = _resolve_block(
+                self.filter_len, block, L_tune, 1, backend, tune, chunk=chunk_hint
+            )
         self.backend = backend
         self._Hr, self._Hi = filter_spectrum(self.h, self.block, backend)
 

@@ -55,6 +55,8 @@ __all__ = [
     "device_key",
     "plan_config",
     "tuned_block",
+    "modeled_block",
+    "pencil_config",
     "measure_log",
     "clear_measure_log",
 ]
@@ -453,6 +455,93 @@ class TuningSpace:
         )
         return cls("plan", key, cands, measure)
 
+    @classmethod
+    def for_pencil(
+        cls,
+        n: int,
+        d: int,
+        batch: int = 1,
+        backend: Optional[str] = None,
+        natural_order: bool = True,
+    ):
+        """The distributed pencil FFT's decisions, as ONE joint space:
+        ``pencil_factors`` balance (every power-of-two n1·n2 = n with both
+        factors divisible by ``d``), the all-to-all chunk count ``K`` the
+        two inner transposes are strip-mined into (K | q, so every chunk
+        is a whole number of columns per device), and whether the
+        split-complex pair is packed into one stacked collective per
+        transpose — the distributed analogue of the rfft even/odd packing,
+        halving the collective count for the same wire bytes.
+
+        Candidate costs are :func:`repro.analysis.roofline.pencil_report`
+        ``modeled_s`` — *seconds*, not HBM bytes, because this decision
+        trades interconnect time against local HBM time and only a common
+        unit can rank them.  ``prune_candidates`` is unit-agnostic (it
+        compares scalars), so the same pruning applies.
+
+        This space deliberately has **no measure_fn**: the pencil path runs
+        inside ``shard_map`` across the hosts of a multi-process mesh, and
+        a per-host measurement (or cache hit) could pick different configs
+        on different hosts and desynchronize the SPMD program — the
+        ``pconv_os_sharded`` precedent.  :func:`pencil_config` therefore
+        never measures and never touches the persistent cache.
+        """
+        from repro.analysis import roofline as rl
+        from repro.core import distributed as dist  # lazy: avoids cycle
+        from repro.core import plan as plan_lib
+
+        base = dist.pencil_factors(n, d)
+        splits = []
+        n1 = 1
+        while n1 <= n:
+            n2 = n // n1
+            if n1 * n2 == n and n1 % d == 0 and n2 % d == 0:
+                splits.append((n1, n2))
+            n1 *= 2
+        if base in splits:  # heuristic (balanced) factorization first
+            splits.remove(base)
+        splits.insert(0, base)
+
+        def vmem_of(n1, n2):
+            worst = 0
+            for m in (n1, n2):
+                for leaf in plan_lib.plan_fft(m).leaf_passes:
+                    worst = max(
+                        worst,
+                        plan_lib.vmem_bytes(leaf, plan_lib.pick_batch_tile(leaf)),
+                    )
+            return worst
+
+        cands = []
+        for n1, n2 in splits:
+            q = n2 // d
+            vmem = vmem_of(n1, n2)
+            for pack in (True, False):
+                for K in (1, 2, 4, 8):
+                    if K > 1 and (not pack or K > q or q % K):
+                        continue
+                    rep = rl.pencil_report(
+                        n, d, batch,
+                        n1=n1, n2=n2, pack=pack, chunks=K,
+                        natural_order=natural_order,
+                    )
+                    cfg = {"n1": n1, "n2": n2, "pack": pack, "a2a_chunks": K}
+                    cands.append((cfg, rep["modeled_s"], vmem))
+        # Heuristic-first convention: (balanced, packed, K=1) leads so
+        # modeled ties keep the simplest schedule.
+        cands.sort(
+            key=lambda c: (
+                (c[0]["n1"], c[0]["n2"]) != base,
+                not c[0]["pack"],
+                c[0]["a2a_chunks"],
+            )
+        )
+        key = (
+            f"{backend or 'auto'}|pencil|n={n},d={d},batch={batch},"
+            f"natural={int(natural_order)}"
+        )
+        return cls("pencil", key, cands, measure_fn=None)
+
     # -- decision ----------------------------------------------------------
 
     def decide(self, mode: str) -> dict:
@@ -525,18 +614,63 @@ def tuned_block(
 
 
 def modeled_block(
-    L: int, Lh: int, batch: int = 1, backend: Optional[str] = None
+    L: int,
+    Lh: int,
+    batch: int = 1,
+    backend: Optional[str] = None,
+    chunk: Optional[int] = None,
 ) -> int:
     """The pure roofline block pick, bypassing cache AND measurement: a
     deterministic function of the shape alone.  SPMD callers
     (:func:`repro.core.distributed.pconv_os_sharded`) use this so every
     host of a multi-process mesh derives the identical block — a per-host
     cache hit or measurement could diverge and desynchronize the
-    ``shard_map`` program's shapes."""
+    ``shard_map`` program's shapes.  ``chunk`` keys the decision to a
+    streaming call grain exactly as :func:`tuned_block`'s does
+    (:class:`~repro.core.overlap.StreamingConv.chunk_hint` under
+    sharding), still cache-free."""
     from repro.analysis.roofline import prune_candidates
 
-    space = TuningSpace.for_os_block(L, Lh, batch, backend)
+    space = TuningSpace.for_os_block(L, Lh, batch, backend, chunk=chunk)
     return int(prune_candidates(space.candidates, tol=PRUNE_TOL)[0][0]["block"])
+
+
+def pencil_config(
+    n: int,
+    d: int,
+    batch: int = 1,
+    backend: Optional[str] = None,
+    tune: Optional[str] = None,
+    natural_order: bool = True,
+) -> dict:
+    """The distributed pencil FFT's tuned decisions — factor balance, a2a
+    chunk count K, split-complex packing — for a length-``n`` transform
+    over ``d`` devices.
+
+    CACHE-FREE AND MEASUREMENT-FREE BY CONSTRUCTION: the pick is a pure
+    function of ``(n, d, batch, backend, mode)`` so every host of a
+    multi-process SPMD mesh derives the identical config with no cache
+    file and no on-device timing (``measure_log()`` stays empty).
+    ``tune="measure"`` therefore clamps to the modeled pick here — to
+    deviate, pass explicit overrides (``factors=``/``chunks=``/``pack=``)
+    to :func:`repro.core.distributed.plan_pencil` on every host.
+
+    ``"off"`` is the historical schedule: balanced factors, serial
+    transposes (K=1) — packed, since stacking the pair is a pure win the
+    satellite made unconditional.
+    """
+    from repro.analysis.roofline import prune_candidates
+
+    mode = resolve_mode(tune)
+    if d <= 1:
+        from repro.core import distributed as dist  # lazy: avoids cycle
+
+        n1, n2 = dist.pencil_factors(n, max(d, 1))
+        return {"n1": n1, "n2": n2, "pack": True, "a2a_chunks": 1}
+    space = TuningSpace.for_pencil(n, d, batch, backend, natural_order)
+    if mode == "off":
+        return space.candidates[0][0]
+    return dict(prune_candidates(space.candidates, tol=PRUNE_TOL)[0][0])
 
 
 def plan_config(spec, backend_name: str, tune: Optional[str] = None) -> Optional[dict]:

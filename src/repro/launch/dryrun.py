@@ -183,13 +183,23 @@ def _fft_plan_info(fft_shape, model_n: int) -> dict:
                 rl.fft_pass_report(n_row, batch=fft_shape.batch, n2=n_col)
             ],
         }
-    leaf_ns = list(dist.pencil_factors(fft_shape.n, model_n))
+    # The tuned pencil schedule the driver will actually run: modeled-only
+    # (`tuning.pencil_config`), so the dry-run host derives the same factors
+    # / packing / chunk count as every SPMD host of the real mesh.
+    ppl = dist.plan_pencil(fft_shape.n, model_n)
+    leaf_ns = [ppl.n1, ppl.n2]
     total = fft_shape.n
     # Schedule facts only — backend negotiation on the dry-run host (CPU)
     # would misstate what the production TPU pencil driver picks.
     info = {
         "leaf_lengths": leaf_ns,
         "leaf_schedules": [plan_lib.describe(m) for m in leaf_ns],
+        "pencil_schedule": ppl.describe(),
+        "a2a_count": ppl.a2a_count(fft_shape.kind != "fftconv"),
+        "comm_report": {
+            k: ppl.report[k]
+            for k in ("comm_bytes_per_step", "local_hbm_bytes", "modeled_s")
+        },
         "hbm_round_trips": max(
             plan_lib.plan_fft(m).hbm_round_trips for m in leaf_ns
         ),

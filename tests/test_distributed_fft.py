@@ -125,3 +125,160 @@ print('PCONV_OS_OK')
 def test_distributed_overlap_save_conv_8dev():
     out = run_in_subprocess(_CONV_OS_BODY, devices=8)
     assert "PCONV_OS_OK" in out
+
+
+_PACKED_BODY = r"""
+import os, tempfile
+# Fresh cache path: proves the pencil decisions themselves never write a
+# cache, independent of what other suites left in the session-wide file.
+os.environ['REPRO_TUNING_CACHE'] = os.path.join(
+    tempfile.mkdtemp(), 'tuning.json')
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import distributed as D
+from repro.core import tuning
+
+mesh = jax.make_mesh((8,), ('x',))
+n = 8192
+x = jnp.zeros((n,), jnp.float32)
+
+def n_a2a(fn):
+    sm = D.shard_map_compat(fn, mesh, in_specs=(P('x'), P('x')),
+                            out_specs=(P('x'), P('x')))
+    return str(jax.make_jaxpr(sm)(x, x)).count('all_to_all')
+
+def fwd(natural, **kw):
+    return lambda xr, xi: D.pfft(xr, xi, n=n, axis_name='x', num_shards=8,
+                                 natural_order=natural, **kw)
+
+def inv(from_pencil, **kw):
+    return lambda xr, xi: D.pifft(xr, xi, n=n, axis_name='x', num_shards=8,
+                                  from_pencil=from_pencil, **kw)
+
+# Packed split-complex: ONE stacked a2a per transpose.  The default path's
+# count follows the tuned chunk count K: 2K + 1 natural, 2K pencil.
+K_nat = D.plan_pencil(n, 8).a2a_chunks
+K_pen = D.plan_pencil(n, 8, natural_order=False).a2a_chunks
+assert n_a2a(fwd(True)) == 2 * K_nat + 1, (n_a2a(fwd(True)), K_nat)
+assert n_a2a(fwd(False)) == 2 * K_pen, (n_a2a(fwd(False)), K_pen)
+assert n_a2a(inv(False)) == 2 * K_nat + 1
+assert n_a2a(inv(True)) == 2 * K_pen
+
+# Forcing K pins the count exactly: K=1 is the flat packed pipeline (3
+# collectives, was 6 per-plane calls), K=2 double-buffers the middle (5).
+assert n_a2a(fwd(True, chunks=1)) == 3
+assert n_a2a(fwd(True, chunks=2)) == 5
+assert n_a2a(fwd(False, chunks=1)) == 2
+assert n_a2a(inv(False, chunks=2)) == 5
+
+# Legacy per-plane baseline kept for A/B: two a2a per step.
+assert n_a2a(fwd(True, pack=False)) == 6
+assert n_a2a(fwd(False, pack=False)) == 4
+assert n_a2a(inv(False, pack=False)) == 6
+
+# pfft2d: one packed a2a per transpose (2), per-plane legacy 4.
+img = jnp.zeros((8, 128, 256), jnp.float32)
+def n_a2a_2d(pack):
+    sm = D.shard_map_compat(
+        lambda xr, xi: D.pfft2d(xr, xi, n1=128, n2=256, axis_name='x',
+                                num_shards=8, pack=pack),
+        mesh, in_specs=(P(None, 'x'), P(None, 'x')),
+        out_specs=(P(None, 'x'), P(None, 'x')))
+    return str(jax.make_jaxpr(sm)(img, img)).count('all_to_all')
+assert n_a2a_2d(True) == 2, n_a2a_2d(True)
+assert n_a2a_2d(False) == 4, n_a2a_2d(False)
+
+# Chunked overlap stays correct, not just countable.
+np.random.seed(5)
+xv = (np.random.randn(2, n) + 1j*np.random.randn(2, n)).astype(np.complex64)
+ref = np.fft.fft(xv)
+yr, yi = D.pfft_sharded(jnp.asarray(xv.real), jnp.asarray(xv.imag), mesh, 'x',
+                        chunks=2)
+rel = np.abs((np.asarray(yr)+1j*np.asarray(yi)) - ref).max() / np.abs(ref).max()
+assert rel < 5e-5, ('chunked numerics', rel)
+
+# All tuned decisions above were modeled, never measured: no timings, and
+# nothing leaked into the persistent cache.
+assert tuning.measure_log() == (), tuning.measure_log()
+assert not os.path.exists(tuning.cache_path()), tuning.cache_path()
+print('PACKED_A2A_OK')
+"""
+
+
+@pytest.mark.slow
+def test_packed_collective_counts_8dev():
+    out = run_in_subprocess(_PACKED_BODY, devices=8)
+    assert "PACKED_A2A_OK" in out
+
+
+_TUNE_DET_BODY = r"""
+import json, os, tempfile
+os.environ['REPRO_TUNING_CACHE'] = os.path.join(
+    tempfile.mkdtemp(), 'tuning.json')
+from repro.core import tuning
+
+picks = {}
+for n in (4096, 8192, 65536):
+    for d in (8, 16):
+        for nat in (True, False):
+            cfg = tuning.pencil_config(n, d, natural_order=nat)
+            picks[f'{n}/{d}/{nat}'] = cfg
+            # tune="measure" must clamp to the same modeled pick: an SPMD
+            # host is never allowed to time its way to a private config.
+            assert tuning.pencil_config(n, d, tune='measure',
+                                        natural_order=nat) == cfg
+assert tuning.measure_log() == ()
+assert not os.path.exists(tuning.cache_path())
+print('PICKS=' + json.dumps(picks, sort_keys=True))
+"""
+
+
+@pytest.mark.slow
+def test_pencil_tuning_deterministic_across_processes():
+    """Two fresh processes must derive the identical modeled pencil config
+    with no cache file mediating — the SPMD-safety contract."""
+    outs = [run_in_subprocess(_TUNE_DET_BODY, devices=8) for _ in range(2)]
+    lines = [
+        next(ln for ln in o.splitlines() if ln.startswith("PICKS="))
+        for o in outs
+    ]
+    assert lines[0] == lines[1]
+
+
+_NONSQUARE_BODY = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import distributed as D
+
+d = {devices}
+mesh = jax.make_mesh((d,), ('x',))
+np.random.seed(7)
+for n in (2048, 32768):
+    n1, n2 = D.pencil_factors(n, d)
+    assert n1 != n2 and n1 % d == 0 and n2 % d == 0, (n, n1, n2)
+    x = (np.random.randn(2, n) + 1j*np.random.randn(2, n)).astype(np.complex64)
+    ref = np.fft.fft(x)
+    yr, yi = D.pfft_sharded(jnp.asarray(x.real), jnp.asarray(x.imag), mesh, 'x')
+    rel = np.abs((np.asarray(yr)+1j*np.asarray(yi)) - ref).max() / np.abs(ref).max()
+    assert rel < 5e-5, ('nonsquare', n, d, rel)
+    zr, zi = D.pifft_sharded(yr, yi, mesh, 'x')
+    err = np.abs((np.asarray(zr)+1j*np.asarray(zi)) - x).max()
+    assert err < 5e-5, ('nonsquare roundtrip', n, d, err)
+
+# explicit factors override flows through the plan layer
+n = 8192
+x = (np.random.randn(1, n) + 1j*np.random.randn(1, n)).astype(np.complex64)
+ref = np.fft.fft(x)
+yr, yi = D.pfft_sharded(jnp.asarray(x.real), jnp.asarray(x.imag), mesh, 'x',
+                        factors=(512, 16))
+rel = np.abs((np.asarray(yr)+1j*np.asarray(yi)) - ref).max() / np.abs(ref).max()
+assert rel < 5e-5, ('factors override', rel)
+print('NONSQUARE_OK')
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("devices", [8, 16])
+def test_nonsquare_factors(devices):
+    out = run_in_subprocess(_NONSQUARE_BODY.format(devices=devices),
+                            devices=devices)
+    assert "NONSQUARE_OK" in out
