@@ -15,12 +15,25 @@ import time
 import jax
 
 
+def device_provenance() -> dict:
+    """``{backend, device_kind}`` of the device this process would run on —
+    recorded in every trajectory row so a number diffed across PRs is only
+    ever compared against the same silicon (an A100 row and a CPU row of
+    the same suite are different baselines, not a regression)."""
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:  # pragma: no cover - no devices visible
+        kind = "unknown"
+    return {"backend": jax.default_backend(), "device_kind": kind}
+
+
 def append_trajectory(path: str, **payload) -> None:
-    """Append ``{timestamp, backend, **payload}`` to the JSON list at
-    ``path`` (created if missing; unreadable history starts fresh)."""
+    """Append ``{timestamp, backend, device_kind, **payload}`` to the JSON
+    list at ``path`` (created if missing; unreadable history starts
+    fresh)."""
     entry = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-        "backend": jax.default_backend(),
+        **device_provenance(),
         **payload,
     }
     path = os.path.abspath(path)

@@ -1,0 +1,138 @@
+"""pallas_gpu vs xla on the acceptance FFT sweep — the crossover's ledger.
+
+Times the Triton-shaped claimed-leaf executor (``backend="pallas_gpu"``)
+against plain XLA over the 1-D acceptance sizes, alongside both backends'
+modeled global-memory bytes (:func:`repro.analysis.roofline.
+gpu_program_report` vs :func:`~repro.analysis.roofline.xla_gpu_fft_bytes`)
+and the tuner's crossover verdict (``tuning.backend_pick``), so each
+``BENCH_gpu.json`` row shows what the model predicted next to what the
+clock said on this device_kind.
+
+On a CPU host the kernels run in Pallas interpret mode (set automatically,
+or force with ``REPRO_PALLAS_INTERPRET=1``), so wall-clocks are only
+meaningful on a real GPU — the smoke mode therefore checks numerics,
+per-leaf claims, and the model's report, never relative speed.
+
+  PYTHONPATH=src python -m benchmarks.bench_gpu [--smoke]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._trajectory import append_trajectory
+from repro.analysis import roofline as rl
+from repro.core import fft as fft_lib
+from repro.core import limits
+from repro.core import plan as plan_lib
+from repro.core import tuning
+from repro.kernels.fft_gpu import gpu_claims
+
+SWEEP = [256, 4096, 131072, 262144]
+SMOKE_SWEEP = [256, 4096]
+
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "BENCH_gpu.json")
+
+
+def _time(fn, *args, reps=3, warmup=1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(sweep, reps=3, batch=4):
+    rows = []
+    for n in sweep:
+        spec = fft_lib.FFTSpec(n=n, kind="fft", batch_hint=batch)
+        p_gpu = fft_lib.plan(spec, backend="pallas_gpu", tune="off")
+        p_xla = fft_lib.plan(spec, backend="xla", tune="off")
+        x = jnp.asarray(np.random.randn(batch, n).astype(np.float32))
+        zi = jnp.zeros_like(x)
+        f_gpu = jax.jit(lambda a, b, p=p_gpu: p.apply_planes(a, b))
+        f_xla = jax.jit(lambda a, b, p=p_xla: p.apply_planes(a, b))
+        gpu_s = _time(f_gpu, x, zi, reps=reps)
+        xla_s = _time(f_xla, x, zi, reps=reps)
+        rep = rl.gpu_program_report(
+            plan_lib.plan_fft(n).passes, gpu_claims, batch=batch
+        )
+        rows.append(
+            {
+                "n": n,
+                "batch": batch,
+                "claims": list(p_gpu.pass_claims),
+                "pallas_gpu_us": gpu_s * 1e6,
+                "xla_us": xla_s * 1e6,
+                "speedup": xla_s / gpu_s if gpu_s else float("inf"),
+                "smem_kib_max": rep["smem_bytes_max"] / 1024,
+                "smem_budget_kib": rep["smem_budget"] / 1024,
+                "global_round_trips": rep["global_round_trips"],
+                "modeled_gpu_gb": rep["modeled_global_bytes"] / 1e9,
+                "modeled_xla_gb": rl.xla_gpu_fft_bytes(n, batch) / 1e9,
+                "tuner_pick": tuning.backend_pick(spec, jax.default_backend(), "model"),
+            }
+        )
+    return rows
+
+
+def _assert_numerics(n: int, batch: int = 2) -> None:
+    """pallas_gpu must match xla at 1e-3 whatever subset of passes it
+    claims — the fallback leaves run inside the same plan."""
+    spec = fft_lib.FFTSpec(n=n, kind="fft")
+    p_gpu = fft_lib.plan(spec, backend="pallas_gpu", tune="off")
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((batch, n)), jnp.float32)
+    yr, yi = p_gpu.apply_planes(x, jnp.zeros_like(x))
+    ref = np.fft.fft(np.asarray(x))
+    err = float(
+        np.max(np.abs(np.asarray(yr) + 1j * np.asarray(yi) - ref))
+        / np.max(np.abs(ref))
+    )
+    assert err < 1e-3, f"pallas_gpu diverged from reference at n={n}: {err}"
+
+
+def main(emit=print, smoke: bool = False):
+    sweep = SMOKE_SWEEP if smoke else SWEEP
+    emit(
+        "gpu.name,n,claims,pallas_gpu_ms,xla_ms,speedup,"
+        "smem_kib,smem_budget_kib,round_trips,modeled_gpu_gb,modeled_xla_gb,pick"
+    )
+    rows = run(sweep, reps=2 if smoke else 3, batch=2 if smoke else 4)
+    for r in rows:
+        emit(
+            f"gpu,{r['n']},{'+'.join(r['claims'])},"
+            f"{r['pallas_gpu_us']/1e3:.2f},{r['xla_us']/1e3:.2f},"
+            f"{r['speedup']:.3f},{r['smem_kib_max']:.0f},"
+            f"{r['smem_budget_kib']:.0f},{r['global_round_trips']},"
+            f"{r['modeled_gpu_gb']:.4f},{r['modeled_xla_gb']:.4f},"
+            f"{r['tuner_pick']}"
+        )
+    if smoke:
+        for n in sweep:
+            _assert_numerics(n)
+        # the mixed plan: a strided-column pass the GPU leaf disclaims must
+        # fall back to xla inside the same planned call
+        claims = fft_lib.plan(
+            fft_lib.FFTSpec(n=131072), backend="pallas_gpu", tune="off"
+        ).pass_claims
+        assert "xla" in claims and "pallas_gpu" in claims, claims
+        _assert_numerics(131072)
+        print(
+            f"gpu.smoke,ok,budget_kib="
+            f"{limits.memory_budget() / 1024:.0f}"
+        )
+        return
+    append_trajectory(TRAJECTORY, gpu=rows)
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

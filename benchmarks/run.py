@@ -13,6 +13,7 @@ import sys
 
 from benchmarks import (
     bench_fftconv,
+    bench_gpu,
     bench_pfft,
     bench_roofline,
     bench_sar,
@@ -29,6 +30,7 @@ SUITES = {
     "roofline": bench_roofline.main, # dry-run roofline summary
     "serve": bench_serve.main,       # prefill/insert/generate phase timings
     "pfft": bench_pfft.main,         # distributed pencil scaling (fake devices)
+    "gpu": bench_gpu.main,           # pallas_gpu vs xla crossover ledger
 }
 
 #: Suites with a fast-path smoke mode; the rest are import-checked only.
@@ -44,6 +46,8 @@ SMOKE_SUITES = {
     "serve": lambda: bench_serve.main(smoke=True),
     # one 16-fake-device point: numerics + packed collective counts
     "pfft": lambda: bench_pfft.main(smoke=True),
+    # Triton-path kernels under interpret: numerics + per-leaf claims
+    "gpu": lambda: bench_gpu.main(smoke=True),
 }
 
 

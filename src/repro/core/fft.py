@@ -48,6 +48,7 @@ import contextlib
 import dataclasses
 import functools
 import inspect
+import itertools
 import os
 import threading
 import types
@@ -201,15 +202,28 @@ class Backend:
     ``takes_axis`` backends additionally accept ``axis=-2`` and transform the
     second-to-last axis in place (the pencil column pass) — detected from the
     function signature at registration.
+
+    ``claims`` is the per-leaf capability surface: a predicate over program
+    :class:`~repro.core.plan.Pass` records saying which passes the backend
+    executes natively.  ``None`` means the backend claims whole plans (every
+    pass).  A backend with a partial claim surface must fall back to ``xla``
+    for unclaimed passes *inside its own fn* — the registry only records the
+    claim map so :attr:`PlannedFFT.pass_claims` can report it per leaf.
+
+    ``seq`` is the registration sequence number — the negotiation tie-break
+    (see :func:`_negotiate`).
     """
 
     name: str
     fn: Callable  # (xr, xi, *, inverse: bool, planned: PlannedFFT) -> Planes
     capabilities: BackendCapabilities
     takes_axis: bool = False
+    claims: Optional[Callable] = None  # Pass -> bool; None = claims all
+    seq: int = 0
 
 
 _REGISTRY: dict = {}
+_REGISTRY_SEQ = itertools.count()
 
 
 def _accepts_axis(fn: Callable) -> bool:
@@ -225,6 +239,7 @@ def register_backend(
     capabilities: BackendCapabilities | None = None,
     *,
     overwrite: bool = False,
+    claims: Optional[Callable] = None,
 ) -> Backend:
     """Register ``fn`` as FFT backend ``name``.
 
@@ -232,13 +247,20 @@ def register_backend(
     split float32 planes, following ``planned.fft_plan``'s schedule (or its
     own, for reference backends).  If it also takes an ``axis`` keyword it
     will be handed ``axis=-2`` column transforms directly (no transpose glue).
+    ``claims`` declares a per-leaf capability surface (see
+    :class:`Backend`); leave ``None`` for whole-plan backends.
     Registering an existing name requires ``overwrite=True`` so a typo cannot
     silently shadow a built-in.
     """
     if not overwrite and name in _REGISTRY:
         raise ValueError(f"FFT backend {name!r} is already registered")
     entry = Backend(
-        name, fn, capabilities or BackendCapabilities(), takes_axis=_accepts_axis(fn)
+        name,
+        fn,
+        capabilities or BackendCapabilities(),
+        takes_axis=_accepts_axis(fn),
+        claims=claims,
+        seq=next(_REGISTRY_SEQ),
     )
     _REGISTRY[name] = entry
     # Existing cached plans may have negotiated without this entry (or hold a
@@ -262,13 +284,16 @@ def get_backend(name: str) -> Backend:
 
 
 def _negotiate(spec: FFTSpec, platform: str) -> Backend:
+    """Highest capability score wins; ties break toward the *most recently
+    registered* entry, so an explicitly registered platform-preferred backend
+    beats a built-in default that also prefers the platform (the built-ins
+    register first)."""
     best = None
     for entry in _REGISTRY.values():
         if not entry.capabilities.supports(spec, platform):
             continue
-        if best is None or entry.capabilities.score(platform) > best.capabilities.score(
-            platform
-        ):
+        key = (entry.capabilities.score(platform), entry.seq)
+        if best is None or key > (best.capabilities.score(platform), best.seq):
             best = entry
     if best is None:
         raise ValueError(
@@ -382,7 +407,7 @@ def _materialize_luts(
     otherwise); the returned references keep the arrays alive for the
     lifetime of the plan."""
     luts = []
-    if backend_name == "pallas":
+    if backend_name in ("pallas", "pallas_gpu"):
         from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
 
         for p in fft_plan.passes:
@@ -405,16 +430,22 @@ def _materialize_luts(
     return tuple(luts)
 
 
-def _pick_tiles(fft_plan: plan_lib.FFTPlan, batch_hint: Optional[int]) -> tuple:
-    """((leaf_n, batch_tile), ...) — VMEM-budgeted, capped by the batch hint.
+def _pick_tiles(
+    fft_plan: plan_lib.FFTPlan, batch_hint: Optional[int], *, gpu: bool = False
+) -> tuple:
+    """((leaf_n, batch_tile), ...) — budget-picked, capped by the batch hint.
 
-    The hint only applies to level-free plans: under a split level each leaf
-    runs with batch × co-factor rows, so capping by the user batch alone
-    would collapse the tile (and explode the kernel grid) on large sizes.
+    ``gpu`` selects the shared-memory working-set model (LUTs staged, not
+    resident) against the device-resolved budget instead of the TPU VMEM
+    model.  The hint only applies to level-free plans: under a split level
+    each leaf runs with batch × co-factor rows, so capping by the user batch
+    alone would collapse the tile (and explode the kernel grid) on large
+    sizes.
     """
+    picker = plan_lib.pick_batch_tile_gpu if gpu else plan_lib.pick_batch_tile
     tiles = []
     for p in fft_plan.leaf_passes:
-        bt = plan_lib.pick_batch_tile(p)
+        bt = picker(p)
         if batch_hint is not None and not fft_plan.levels:
             cap = 1 << (batch_hint - 1).bit_length()  # next pow2 >= hint
             bt = max(1, min(bt, cap))
@@ -423,7 +454,11 @@ def _pick_tiles(fft_plan: plan_lib.FFTPlan, batch_hint: Optional[int]) -> tuple:
 
 
 def _tuned_tiles(
-    fft_plan: plan_lib.FFTPlan, batch_hint: Optional[int], cfg: Optional[dict]
+    fft_plan: plan_lib.FFTPlan,
+    batch_hint: Optional[int],
+    cfg: Optional[dict],
+    *,
+    gpu: bool = False,
 ) -> tuple:
     """The heuristic tiles of :func:`_pick_tiles`, scaled per leaf by a
     tuned plan config.
@@ -432,13 +467,14 @@ def _tuned_tiles(
     know per-call batch hints), so it is applied as a scale on top of the
     hint-capped default — a tuned halving halves the capped tile too, and
     the modeled (no-op) pick leaves the hint behavior untouched."""
-    tiles = dict(_pick_tiles(fft_plan, batch_hint))
+    picker = plan_lib.pick_batch_tile_gpu if gpu else plan_lib.pick_batch_tile
+    tiles = dict(_pick_tiles(fft_plan, batch_hint, gpu=gpu))
     if cfg:
         for leaf_n, bt in cfg.get("batch_tiles", {}).items():
             n = int(leaf_n)
             if n not in tiles:
                 continue
-            base = plan_lib.pick_batch_tile(fft_plan.leaf_pass(n))
+            base = picker(fft_plan.leaf_pass(n))
             while base > int(bt) and tiles[n] > 1:
                 base //= 2
                 tiles[n] = max(1, tiles[n] // 2)
@@ -543,18 +579,54 @@ class PlannedFFT:
             return cols.passes + ep + inner.passes
         return tuple(p for c in self.children for p in c.passes) + ep
 
+    @property
+    def pass_claims(self) -> tuple:
+        """Executing backend name per program pass, in :attr:`passes` order.
+
+        Whole-plan backends claim every pass.  A backend with a per-leaf
+        ``claims`` surface (``pallas_gpu``) reports its own name where the
+        pass runs through its kernels and ``"xla"`` where its executor falls
+        back — so a mixed program is observable leaf by leaf.
+        """
+        claims = self.backend.claims
+        if claims is None:
+            return tuple(self.backend.name for _ in self.passes)
+        return tuple(
+            self.backend.name if claims(p) else "xla" for p in self.passes
+        )
+
     def describe(self) -> str:
         spec = self.spec
         size = f"N={spec.n2}x{spec.n}" if spec.n2 is not None else f"N={spec.n}"
         head = f"{spec.kind} {size} backend={self.backend.name}: "
         if self.fft_plan is not None:
-            return head + plan_lib.describe_program(self.fft_plan) + self._describe_tuned()
+            return (
+                head
+                + plan_lib.describe_program(self.fft_plan)
+                + self._describe_tuned()
+                + self._describe_gpu()
+            )
         parts = [plan_lib.describe_program(c.fft_plan) for c in self.children
                  if c.fft_plan is not None]
         s = head + " | ".join(parts)
         if self.epilogue is not None:
             s += f"; epilogue pass: {self.epilogue.kind} n={self.epilogue.n}"
-        return s
+        return s + self._describe_gpu()
+
+    def _describe_gpu(self) -> str:
+        """Shared-memory bytes + global-memory round trips, appended for GPU
+        plans — the paper's metric on the paper's hardware."""
+        if self.backend.claims is None:
+            return ""
+        from repro.analysis import roofline as rl  # lazy: analysis layer
+
+        rep = rl.gpu_plan_report(self)
+        return (
+            f"; gpu: {rep['global_round_trips']} global round trips, "
+            f"{rep['smem_bytes_max'] / 1024:.0f} KiB peak smem/block "
+            f"(budget {rep['smem_budget'] / 1024:.0f} KiB), "
+            f"claims [{', '.join(rep['claims'])}]"
+        )
 
     def _describe_tuned(self) -> str:
         """The tuned choices per pass, appended to :meth:`describe` so the
@@ -948,6 +1020,13 @@ def _build_plan(
 
     if backend_name is None:
         entry = _negotiate(spec, platform)
+        if entry.claims is not None and tune != "off":
+            # A per-leaf backend won negotiation: let the tuner decide the
+            # pallas↔xla crossover for this device (modeled by default,
+            # measured under tune="measure"; cached either way).
+            pick = tuning.backend_pick(spec, platform, tune)
+            if pick is not None and pick != entry.name:
+                entry = get_backend(pick)
     else:
         entry = get_backend(backend_name)
         if not entry.capabilities.supports(spec, platform):
@@ -956,6 +1035,7 @@ def _build_plan(
             )
 
     kind = spec.kind
+    gpu = entry.claims is not None
     if kind in _COMPLEX_KINDS:
         cfg = tuning.plan_config(spec, entry.name, tune)
         fft_plan = plan_lib.plan_fft(
@@ -968,7 +1048,7 @@ def _build_plan(
             entry,
             fft_plan,
             luts=_materialize_luts(fft_plan, kind == "ifft", entry.name),
-            batch_tiles=_tuned_tiles(fft_plan, spec.batch_hint, cfg),
+            batch_tiles=_tuned_tiles(fft_plan, spec.batch_hint, cfg, gpu=gpu),
             tuned=cfg,
         )
 
@@ -990,7 +1070,7 @@ def _build_plan(
             entry,
             fft_plan,
             luts=_materialize_luts(fft_plan, kind == "ifft2", entry.name),
-            batch_tiles=_tuned_tiles(fft_plan, None, cfg),
+            batch_tiles=_tuned_tiles(fft_plan, None, cfg, gpu=gpu),
             tuned=cfg,
         )
 
@@ -1094,6 +1174,28 @@ def _pallas_backend(xr, xi, *, inverse, planned, axis=-1):
     )
 
 
+def _pallas_gpu_backend(xr, xi, *, inverse, planned, axis=-1):
+    from repro.kernels import fft_gpu  # lazy: avoids import cycle
+
+    if axis == -2:
+        # Column transforms are not on the GPU claim surface yet — same
+        # transpose-free contraction / sandwich the xla backend uses.
+        return _xla_backend(xr, xi, inverse=inverse, planned=planned, axis=axis)
+    return fft_gpu.execute_plan_gpu(
+        xr,
+        xi,
+        planned.fft_plan,
+        inverse=inverse,
+        batch_tiles=planned.batch_tiles,
+    )
+
+
+def _pallas_gpu_claims(p) -> bool:
+    from repro.kernels import fft_gpu  # lazy: avoids import cycle
+
+    return fft_gpu.gpu_claims(p)
+
+
 register_backend(
     "stockham",
     _stockham_backend,
@@ -1112,6 +1214,19 @@ register_backend(
         preferred_platforms=frozenset({"tpu"}),
         native_2d=True,  # executes joint rows+cols programs in one call
     ),
+)
+# The paper's native hardware.  Registered after xla so the registration-
+# order tie-break resolves the shared gpu preference toward the Triton-shaped
+# kernels; cpu stays xla's (pallas_gpu does not prefer cpu — it merely runs
+# there under interpret mode, which is how CI proves its numerics).
+register_backend(
+    "pallas_gpu",
+    _pallas_gpu_backend,
+    BackendCapabilities(
+        platforms=frozenset({"cpu", "gpu"}),  # cpu = interpret mode
+        preferred_platforms=frozenset({"gpu"}),
+    ),
+    claims=_pallas_gpu_claims,
 )
 
 

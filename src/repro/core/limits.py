@@ -20,6 +20,9 @@ __all__ = [
     "FUSED_MAX",
     "OS_FACTOR",
     "VMEM_BUDGET",
+    "GPU_SMEM_BUDGETS",
+    "GPU_SMEM_DEFAULT",
+    "memory_budget",
     "next_pow2",
 ]
 
@@ -43,6 +46,58 @@ OS_FACTOR = 8
 #: leaving room for Mosaic's double buffering.  Binds the batch-tile and
 #: pass-chunk picks (and the tuner's candidate feasibility check).
 VMEM_BUDGET = 8 * 1024 * 1024
+
+#: Per-SM shared-memory budgets (bytes) for CUDA-class devices, keyed by a
+#: lowercase substring of ``jax.devices()[0].device_kind``.  These are the
+#: opt-in dynamic-shared-memory carveouts (the paper's Fermi generation had
+#: 48 KB; modern parts expose far more), matched most-specific-first.
+GPU_SMEM_BUDGETS = (
+    ("h100", 228 * 1024),
+    ("h200", 228 * 1024),
+    ("b200", 228 * 1024),
+    ("a100", 164 * 1024),
+    ("a10", 164 * 1024),
+    ("l4", 100 * 1024),
+    ("v100", 96 * 1024),
+    ("t4", 64 * 1024),
+    ("p100", 64 * 1024),
+)
+
+#: Conservative fallback for unrecognized GPU device kinds: the 48 KB
+#: static shared-memory floor every CUDA generation since Fermi guarantees
+#: (the budget the source paper tiles against).
+GPU_SMEM_DEFAULT = 48 * 1024
+
+
+def memory_budget(device_kind: str | None = None) -> int:
+    """Fast-tier working-set budget (bytes) for ``device_kind``.
+
+    The regime map used to hard-code the TPU ``VMEM_BUDGET``; on CUDA-class
+    devices the same decisions (leaf batch tiles, pass chunk widths, tuner
+    feasibility) bind against per-SM shared memory instead.  ``device_kind``
+    defaults to the first visible jax device; TPU and CPU resolve to
+    ``VMEM_BUDGET`` (CPU hosts interpret-mode runs of the TPU schedule), GPU
+    kinds resolve through :data:`GPU_SMEM_BUDGETS`.
+    """
+    if device_kind is None:
+        try:
+            import jax
+
+            device = jax.devices()[0]
+            device_kind = device.device_kind
+            if device.platform not in ("gpu", "cuda", "rocm"):
+                return VMEM_BUDGET
+        except Exception:
+            return VMEM_BUDGET
+    kind = device_kind.lower()
+    if "tpu" in kind or kind in ("cpu", "", "interpreter"):
+        return VMEM_BUDGET
+    for tag, budget in GPU_SMEM_BUDGETS:
+        if tag in kind:
+            return budget
+    if any(t in kind for t in ("nvidia", "cuda", "gpu", "rtx", "geforce", "amd", "mi3")):
+        return GPU_SMEM_DEFAULT
+    return VMEM_BUDGET
 
 
 def next_pow2(n: int) -> int:

@@ -44,7 +44,7 @@ import dataclasses
 import functools
 import math
 
-from repro.core.limits import DIRECT_MAX, FUSED_MAX, VMEM_BUDGET
+from repro.core.limits import DIRECT_MAX, FUSED_MAX, VMEM_BUDGET, memory_budget
 
 __all__ = [
     "DIRECT_MAX",
@@ -431,6 +431,45 @@ def pick_batch_tile(p: Pass, budget: int = VMEM_BUDGET) -> int:
     """Largest power-of-two batch tile whose working set fits the budget."""
     bt = 512
     while bt > 1 and vmem_bytes(p, bt) > budget:
+        bt //= 2
+    return bt
+
+
+#: K-loop staging depth of the Triton GEMM pipeline: the leaf's LUT operands
+#: stream through shared memory in (GPU_LUT_STAGE x tile) stripes rather than
+#: residing whole, so only one stripe per operand is charged to the budget.
+GPU_LUT_STAGE = 32
+
+
+def gpu_smem_bytes(p: Pass, batch_tile: int) -> int:
+    """Modeled per-program shared-memory working set of the GPU row leaf.
+
+    Differs from :func:`vmem_bytes` in what counts as resident: on TPU the
+    whole DFT matrix / twiddle grid sits in VMEM for the block; on a CUDA SM
+    the signal tiles are resident but the LUT operands are software-pipelined
+    through shared memory one :data:`GPU_LUT_STAGE`-deep stripe at a time
+    (the Triton ``dot`` K loop).  Charging the full LUTs against a 48-228 KB
+    budget would force every tile to 1 and misreport the paper's metric.
+    """
+    f32 = 4
+    if p.kind == "direct":
+        sig = batch_tile * p.n * 2 * f32
+        stripe = GPU_LUT_STAGE * p.n * 2 * f32
+        return 2 * sig + stripe                       # in, out + W stripe
+    sig = batch_tile * p.n * 2 * f32
+    stripes = GPU_LUT_STAGE * (p.n1 + p.n2) * 2 * f32  # W1, W2 stripes
+    tw = GPU_LUT_STAGE * p.n2 * 2 * f32                # twiddle-grid stripe
+    return 3 * sig + stripes + tw                      # in, mid, out
+
+
+def pick_batch_tile_gpu(p: Pass, budget: int | None = None) -> int:
+    """Largest power-of-two batch tile whose GPU shared-memory working set
+    fits ``budget`` (default: the resolved :func:`~repro.core.limits.memory_budget`
+    of the first visible device)."""
+    if budget is None:
+        budget = memory_budget()
+    bt = 512
+    while bt > 1 and gpu_smem_bytes(p, bt) > budget:
         bt //= 2
     return bt
 

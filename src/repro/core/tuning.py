@@ -52,8 +52,10 @@ __all__ = [
     "TuningCache",
     "cache",
     "cache_path",
+    "seed_cache",
     "device_key",
     "plan_config",
+    "backend_pick",
     "tuned_block",
     "modeled_block",
     "pencil_config",
@@ -107,6 +109,35 @@ def cache_path() -> str:
     )
 
 
+_SEED_CACHE: Optional[dict] = None
+
+
+def seed_cache() -> dict:
+    """The read-only seed tuning cache shipped as package data
+    (``repro/data/tuning_seed.json``) — measured winners for common
+    (device_kind, spec) pairs, layered *beneath* the user cache so a spec
+    present in the seed plans tuned out of the box with zero first-request
+    measurement.  Missing or unreadable package data degrades to empty."""
+    global _SEED_CACHE
+    if _SEED_CACHE is None:
+        data: dict = {}
+        try:
+            from importlib import resources
+
+            text = (
+                resources.files("repro.data")
+                .joinpath("tuning_seed.json")
+                .read_text()
+            )
+            loaded = json.loads(text)
+            if isinstance(loaded, dict):
+                data = loaded
+        except Exception:  # pragma: no cover - package-data-less installs
+            data = {}
+        _SEED_CACHE = data
+    return _SEED_CACHE
+
+
 def device_key() -> str:
     """First device's kind — the hardware half of every cache key (a config
     tuned on one accelerator generation must not leak onto another)."""
@@ -153,7 +184,13 @@ class TuningCache:
         return self._mem
 
     def get(self, key: str) -> Optional[dict]:
-        return self._load().get(key)
+        hit = self._load().get(key)
+        if hit is not None:
+            return hit
+        # User-cache miss: fall through to the shipped read-only seed, so
+        # common (device_kind, spec) pairs are tuned out of the box.  A
+        # later put() of the same key shadows the seed (user cache wins).
+        return seed_cache().get(key)
 
     def put(self, key: str, entry: dict) -> None:
         mem = self._load()
@@ -237,6 +274,7 @@ class TuningSpace:
         key: str,
         candidates: list,
         measure_fn: Optional[Callable] = None,
+        budget: Optional[int] = None,
     ):
         if not candidates:
             raise ValueError(f"empty tuning space for {decision} {key}")
@@ -244,6 +282,9 @@ class TuningSpace:
         self.key = key
         self.candidates = candidates
         self.measure_fn = measure_fn
+        #: Fast-tier working-set budget the feasibility pruning binds against
+        #: (None → the TPU ``VMEM_BUDGET`` default inside prune_candidates).
+        self.budget = budget
 
     # -- construction ------------------------------------------------------
 
@@ -345,11 +386,25 @@ class TuningSpace:
         streams its n² DFT matrix) and are pruned hard — ``tune="model"``
         keeps the historical plan on ties and deviates only where the
         model's HBM-byte account is strictly cheaper.
+
+        Candidate enumeration and feasibility bind against the *resolved*
+        device budget (:func:`repro.core.limits.memory_budget`): VMEM on
+        TPU/CPU, per-SM shared memory on CUDA-class devices — where the
+        ``pallas_gpu`` backend additionally swaps in the GPU working-set
+        model (LUTs staged through the GEMM pipeline, not resident).
         """
-        from repro.core import plan as plan_lib
+        from repro.core import limits, plan as plan_lib
         from repro.core.limits import DIRECT_MAX, FUSED_MAX
 
         n, n2 = spec.n, getattr(spec, "n2", None)
+        budget = limits.memory_budget()
+        gpu = backend_name == "pallas_gpu"
+        if gpu:
+            pick_tile = lambda p: plan_lib.pick_batch_tile_gpu(p, budget)  # noqa: E731
+            tile_bytes = plan_lib.gpu_smem_bytes
+        else:
+            pick_tile = lambda p: plan_lib.pick_batch_tile(p, budget)  # noqa: E731
+            tile_bytes = plan_lib.vmem_bytes
 
         def build(fused_max, direct_max=DIRECT_MAX):
             if n2 is not None:
@@ -364,15 +419,15 @@ class TuningSpace:
                     continue
                 if p.axis == -2:
                     # Column passes sweep the image width (n row bins).
-                    base = plan_lib.pick_pass_chunk(p, width=n)
+                    base = plan_lib.pick_pass_chunk(p, budget=budget, width=n)
                 elif p.view_in and p.view_in[0] == 1:
                     continue  # whole-signal pass: batch-tiled, not chunked
                 else:
-                    base = plan_lib.pick_pass_chunk(p)
+                    base = plan_lib.pick_pass_chunk(p, budget=budget)
                 chunks[str(i)] = max(1, base >> chunk_shift)
             tiles = {}
             for p in plan.leaf_passes:
-                base = plan_lib.pick_batch_tile(p)
+                base = pick_tile(p)
                 tiles[str(p.n)] = max(1, base >> tile_shift)
             return {
                 "fused_max": fused_max,
@@ -396,11 +451,12 @@ class TuningSpace:
                     continue
                 c = config["chunks"].get(str(i))
                 if c is not None:
-                    worst = max(worst, plan_lib._pass_chunk_bytes(p, c))
+                    if not gpu:  # chunked passes are the gpu xla fallback's
+                        worst = max(worst, plan_lib._pass_chunk_bytes(p, c))
                 else:
                     t = config["batch_tiles"].get(str(p.n))
                     if t is not None:
-                        worst = max(worst, plan_lib.vmem_bytes(p, t))
+                        worst = max(worst, tile_bytes(p, t))
             return worst
 
         # Crossover and engine alternatives — only those that actually
@@ -432,7 +488,6 @@ class TuningSpace:
             import jax
             import jax.numpy as jnp
             import numpy as np
-            from repro.kernels import ops as kernel_ops
 
             plan = build(config["fused_max"], config.get("direct_max", DIRECT_MAX))
             chunks = {int(k): v for k, v in config["chunks"].items()}
@@ -441,11 +496,20 @@ class TuningSpace:
             rng = np.random.default_rng(0)
             shape = (b, n2, n) if n2 is not None else (b, n)
             xr = jnp.asarray(rng.standard_normal(shape), jnp.float32)
-            fn = jax.jit(
-                lambda a: kernel_ops.execute_plan(
-                    a, a, plan, batch_tiles=tiles, chunks=chunks
+            if gpu:
+                from repro.kernels import fft_gpu
+
+                fn = jax.jit(
+                    lambda a: fft_gpu.execute_plan_gpu(a, a, plan, batch_tiles=tiles)
                 )
-            )
+            else:
+                from repro.kernels import ops as kernel_ops
+
+                fn = jax.jit(
+                    lambda a: kernel_ops.execute_plan(
+                        a, a, plan, batch_tiles=tiles, chunks=chunks
+                    )
+                )
             return _time(lambda: fn(xr))
 
         size = f"n={n}" + (f",n2={n2}" if n2 is not None else "")
@@ -453,7 +517,60 @@ class TuningSpace:
             f"{backend_name}|plan|{spec.kind}|{size}|"
             f"batch={spec.batch_hint or 0}"
         )
-        return cls("plan", key, cands, measure)
+        return cls("plan", key, cands, measure, budget=budget)
+
+    @classmethod
+    def for_backend(cls, spec, platform: str):
+        """The pallas↔xla backend crossover for one 1-D complex spec on a
+        GPU-class device — the registry's negotiation picks the Triton-shaped
+        backend wherever it prefers the platform; this space decides whether
+        that is actually a win *for this spec on this device*.
+
+        Modeled costs are global-memory bytes: the claimed pass program's
+        account (:func:`repro.analysis.roofline.gpu_program_report` — fused
+        leaves touch the signal once, unclaimed passes pay the fallback's
+        transposes) against the plain-XLA four-step account
+        (:func:`repro.analysis.roofline.xla_gpu_fft_bytes` — per level, two
+        GEMM round trips + twiddle + transpose).  ``tune="measure"`` times
+        both backends' planned calls and caches the winner per device_kind.
+        The pallas_gpu candidate leads, so modeled ties keep the negotiated
+        pick.
+        """
+        from repro.analysis import roofline as rl
+        from repro.core import limits, plan as plan_lib
+        from repro.kernels import fft_gpu
+
+        n = spec.n
+        batch = spec.batch_hint or 1
+        fft_plan = plan_lib.plan_fft(n)
+        gpu_rep = rl.gpu_program_report(
+            fft_plan.passes, fft_gpu.gpu_claims, batch=batch
+        )
+        cands = [
+            ({"backend": "pallas_gpu"}, gpu_rep["modeled_global_bytes"], 0),
+            ({"backend": "xla"}, rl.xla_gpu_fft_bytes(n, batch), 0),
+        ]
+
+        def measure(config):
+            import jax
+            import jax.numpy as jnp
+            import numpy as np
+            from repro.core import fft as F  # lazy: avoids cycle
+
+            planned = F.plan(spec, backend=config["backend"], tune="off")
+            rng = np.random.default_rng(0)
+            b = spec.batch_hint or 2
+            xr = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+            fn = jax.jit(lambda a: planned.apply_planes(a, a))
+            return _time(lambda: fn(xr))
+
+        key = (
+            f"{platform}|backend_xover|{spec.kind}|n={n}|"
+            f"batch={spec.batch_hint or 0}"
+        )
+        return cls(
+            "backend_xover", key, cands, measure, budget=limits.memory_budget()
+        )
 
     @classmethod
     def for_pencil(
@@ -563,7 +680,9 @@ class TuningSpace:
         hit = cache.get(key)
         if hit is not None and (mode == "model" or hit.get("mode") == "measure"):
             return hit["config"]
-        survivors = prune_candidates(self.candidates, tol=PRUNE_TOL)
+        survivors = prune_candidates(
+            self.candidates, tol=PRUNE_TOL, vmem_budget=self.budget
+        )
         if mode == "measure" and self.measure_fn is not None:
             default = self.candidates[0]
             if all(s is not default for s in survivors):
@@ -680,9 +799,34 @@ def plan_config(spec, backend_name: str, tune: Optional[str] = None) -> Optional
     mode = resolve_mode(tune)
     if mode == "off":
         return None
-    if backend_name != "pallas":
-        # Only the pallas executor consumes chunks/tiles; other backends
+    if backend_name == "pallas_gpu":
+        # The Triton-shaped executor is 1-D only (2-D specs compose per-axis
+        # child plans, which re-enter here with their 1-D specs).
+        if getattr(spec, "n2", None) is not None:
+            return None
+    elif backend_name != "pallas":
+        # Only the pallas executors consume chunks/tiles; other backends
         # re-derive their own schedule, so there is nothing to tune yet.
         return None
     space = TuningSpace.for_plan(spec, backend_name)
     return space.decide(mode)
+
+
+def backend_pick(spec, platform: str, tune: Optional[str] = None) -> Optional[str]:
+    """The tuned pallas↔xla crossover pick for a plan whose negotiated
+    backend carries per-pass claims (i.e. ``pallas_gpu``), or ``None`` to
+    keep the negotiated backend.
+
+    ``off`` never overrides (no cache traffic, no measurement); ``model``
+    compares the claimed program's modeled global-memory bytes against the
+    plain-XLA four-step account; ``measure`` times both planned calls once
+    per ``(device_kind, spec)`` and caches the winner.  Only 1-D complex
+    specs participate — everything else keeps negotiation's answer.
+    """
+    mode = resolve_mode(tune)
+    if mode == "off":
+        return None
+    if spec.kind not in ("fft", "ifft") or getattr(spec, "n2", None) is not None:
+        return None
+    space = TuningSpace.for_backend(spec, platform)
+    return str(space.decide(mode)["backend"])

@@ -1,15 +1,20 @@
-"""Version-tolerant shims over the Pallas TPU API surface.
+"""Version-tolerant shims over the Pallas TPU/Triton API surface.
 
 The TPU compiler-params dataclass was renamed across JAX releases
-(``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``).  Kernels go through
-:func:`compiler_params` so either spelling works without pinning JAX.
+(``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``), and the Triton
+variant moved between ``pl.triton`` spellings.  Kernels go through
+:func:`compiler_params` (TPU) / :func:`gpu_compiler_params` (Triton) so
+either spelling works without pinning JAX.  GPU-path kernels must never
+receive TPU params (``dimension_semantics`` is a Mosaic concept); they pass
+``gpu_compiler_params(...)``, which degrades to ``None`` where the Triton
+dataclass is unavailable (pure-interpret environments).
 """
 
 from __future__ import annotations
 
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["compiler_params"]
+__all__ = ["compiler_params", "gpu_compiler_params"]
 
 _COMPILER_PARAMS_CLS = getattr(
     pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
@@ -24,3 +29,22 @@ if _COMPILER_PARAMS_CLS is None:  # pragma: no cover - very old/new pallas
 def compiler_params(**kwargs):
     """Build the TPU compiler-params object under either JAX naming."""
     return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+def gpu_compiler_params(num_warps: int = 4, num_stages: int = 2):
+    """Triton compiler params under any available spelling, else ``None``.
+
+    ``None`` is a valid ``pallas_call`` argument everywhere (including
+    interpret mode), so callers can pass the result unconditionally.
+    """
+    try:
+        from jax.experimental.pallas import triton as plt
+    except Exception:  # pragma: no cover - no Triton lowering available
+        return None
+    cls = getattr(plt, "CompilerParams", getattr(plt, "TritonCompilerParams", None))
+    if cls is None:  # pragma: no cover
+        return None
+    try:
+        return cls(num_warps=num_warps, num_stages=num_stages)
+    except TypeError:  # pragma: no cover - signature drift
+        return cls()
