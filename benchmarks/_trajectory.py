@@ -27,6 +27,28 @@ def device_provenance() -> dict:
     return {"backend": jax.default_backend(), "device_kind": kind}
 
 
+def load_trajectory(path: str) -> list:
+    """The JSON history list at ``path``, tolerantly: unreadable/corrupt
+    history starts fresh, and rows written before device provenance existed
+    (pre-PR-8 ``BENCH_*.json``) are backfilled with
+    ``device_kind``/``backend`` of ``"unknown"`` instead of KeyError-ing
+    whichever bench script re-appends to the old trajectory."""
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    if not isinstance(history, list):
+        history = []
+    for row in history:
+        if isinstance(row, dict):
+            row.setdefault("device_kind", "unknown")
+            row.setdefault("backend", "unknown")
+    return [row for row in history if isinstance(row, dict)]
+
+
 def append_trajectory(path: str, **payload) -> None:
     """Append ``{timestamp, backend, device_kind, **payload}`` to the JSON
     list at ``path`` (created if missing; unreadable history starts
@@ -37,13 +59,7 @@ def append_trajectory(path: str, **payload) -> None:
         **payload,
     }
     path = os.path.abspath(path)
-    history = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                history = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            history = []
+    history = load_trajectory(path)
     history.append(entry)
     with open(path, "w") as f:
         json.dump(history, f, indent=1)

@@ -1,0 +1,114 @@
+"""Arbitrary-length FFT: Bluestein leaf vs padded-pow2 vs ``jnp.fft``.
+
+For each non-pow2 length the sweep times three routes to a usable spectrum:
+
+* ``bluestein``   — the planned FFT at exactly ``n`` (chirp-conv leaves,
+  correct n-point spectrum);
+* ``padded_pow2`` — zero-pad to ``next_pow2(n)`` and run the pow2 plan
+  (cheaper transform, but the WRONG bins unless the consumer interpolates);
+* ``jnp_fft``     — XLA's native mixed-radix/Bluestein at ``n``, the
+  external yardstick.
+
+Each row carries ``analysis.roofline.bluestein_report``'s modeled pad ratio
+and flops overhead so the measured gap can be read against the model.  Full
+runs append a ``BENCH_bluestein.json`` trajectory entry; ``--smoke`` runs a
+tiny sweep and gates on numerics vs ``numpy.fft`` at 1e-3, so CI exercises
+the chirp-conv leaves end to end.
+
+  PYTHONPATH=src python -m benchmarks.bench_bluestein [--smoke]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._trajectory import append_trajectory
+from repro.analysis import roofline as rl
+from repro.core import fft as fft_lib
+from repro.core.limits import next_pow2
+
+# primes and 3·2^k — the pulse-sized lengths real radar/audio dictate.
+SWEEP = [2029, 4093, 12288, 40000]
+SMOKE_SWEEP = [97, 1536]
+
+TRAJECTORY = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_bluestein.json"
+)
+
+
+def _time(fn, *args, reps=3, warmup=1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(sweep, reps=3, batch=4, check=False):
+    rows = []
+    for n in sweep:
+        rng = np.random.default_rng(n)
+        x = (rng.standard_normal((batch, n)) + 1j * rng.standard_normal((batch, n))).astype(np.complex64)
+        xj = jnp.asarray(x)
+        m = next_pow2(n)
+        xp = jnp.pad(xj, ((0, 0), (0, m - n)))
+        # xla backend: same arithmetic as the Pallas kernels, which are
+        # accelerator-targeted — interpret-mode timing is meaningless.
+        p_blu = fft_lib.plan(fft_lib.FFTSpec(n=n), backend="xla")
+        p_pow = fft_lib.plan(fft_lib.FFTSpec(n=m), backend="xla")
+        f_blu = jax.jit(lambda a: p_blu(a))
+        f_pow = jax.jit(lambda a: p_pow(a))
+        f_jnp = jax.jit(lambda a: jnp.fft.fft(a))
+        rep = rl.bluestein_report(n, batch=batch)
+        row = {
+            "n": n,
+            "batch": batch,
+            "pad": rep["pad"],
+            "pad_ratio": rep["pad_ratio"],
+            "modeled_flops_overhead": rep["flops_overhead"],
+            "bluestein_us": _time(f_blu, xj, reps=reps) * 1e6,
+            "padded_pow2_us": _time(f_pow, xp, reps=reps) * 1e6,
+            "jnp_fft_us": _time(f_jnp, xj, reps=reps) * 1e6,
+        }
+        if check:
+            ref = np.fft.fft(x)
+            err = float(
+                np.abs(np.asarray(f_blu(xj)) - ref).max() / np.abs(ref).max()
+            )
+            assert err < 1e-3, f"Bluestein leaf disagrees with numpy at n={n}: {err}"
+            row["rel_err_vs_numpy"] = err
+        rows.append(row)
+    return rows
+
+
+def main(emit=print, smoke: bool = False):
+    sweep = SMOKE_SWEEP if smoke else SWEEP
+    emit(
+        "bluestein.name,n,pad,pad_ratio,modeled_flops_overhead,"
+        "bluestein_ms,padded_pow2_ms,jnp_fft_ms"
+    )
+    rows = run(
+        sweep, reps=2 if smoke else 3, batch=2 if smoke else 4, check=smoke
+    )
+    for r in rows:
+        emit(
+            f"bluestein,{r['n']},{r['pad']},{r['pad_ratio']:.2f},"
+            f"{r['modeled_flops_overhead']:.1f},{r['bluestein_us']/1e3:.2f},"
+            f"{r['padded_pow2_us']/1e3:.2f},{r['jnp_fft_us']/1e3:.2f}"
+        )
+    if smoke:
+        return
+    append_trajectory(TRAJECTORY, bluestein=rows)
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

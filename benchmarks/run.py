@@ -12,6 +12,7 @@ Emits ``name,...`` CSV rows (paper-table stand-ins documented per module).
 import sys
 
 from benchmarks import (
+    bench_bluestein,
     bench_fftconv,
     bench_gpu,
     bench_pfft,
@@ -31,6 +32,7 @@ SUITES = {
     "serve": bench_serve.main,       # prefill/insert/generate phase timings
     "pfft": bench_pfft.main,         # distributed pencil scaling (fake devices)
     "gpu": bench_gpu.main,           # pallas_gpu vs xla crossover ledger
+    "bluestein": bench_bluestein.main,  # non-pow2 vs padded-pow2 vs jnp.fft
 }
 
 #: Suites with a fast-path smoke mode; the rest are import-checked only.
@@ -48,6 +50,8 @@ SMOKE_SUITES = {
     "pfft": lambda: bench_pfft.main(smoke=True),
     # Triton-path kernels under interpret: numerics + per-leaf claims
     "gpu": lambda: bench_gpu.main(smoke=True),
+    # gates chirp-conv leaves on numerics vs numpy before timing
+    "bluestein": lambda: bench_bluestein.main(smoke=True),
 }
 
 

@@ -119,3 +119,31 @@ for az0, rg0 in targets2:
     ok = (az_pk, rg_pk) == (4, 4) and image2[az0, rg0] > 0.5
     print(f"  target (az={az0:3d}, rg={rg0:4d}): "
           f"|X|={image2[az0, rg0]:.2f} {'OK' if ok else 'MISS'}")
+
+# ===========================================================================
+# Scene 3 — prime range line: pulse-sized FFTs via the Bluestein leaf
+# ===========================================================================
+# Real radars size range lines to the pulse, not to 2^k (arXiv:1505.08067).
+# A prime-length line used to be rejected by FFTSpec; it now plans as a
+# Bluestein chirp-conv leaf, and fft_conv(pad='exact') keeps the spectrum
+# bin-aligned to the true linear-convolution length.
+n_rg3, chirp3 = 2029, 64                               # prime range samples
+t3 = np.arange(chirp3, dtype=np.float64)
+pulse3 = np.cos(0.01 * t3**2).astype(np.float32)
+line = np.zeros((4, n_rg3), np.float32)
+for row, rg0 in enumerate((173, 611, 1301, 1949)):
+    line[row, rg0 : rg0 + chirp3] += pulse3[: max(0, min(chirp3, n_rg3 - rg0))]
+line += rng.standard_normal(line.shape).astype(np.float32) * 0.02
+
+from repro.core.conv import fft_conv
+
+rc3 = fft_conv(jnp.asarray(line), jnp.asarray(pulse3[::-1].copy()),
+               pad="exact")                            # n = 2092, non-pow2
+rg3_plan = F.plan(F.FFTSpec(n=n_rg3, kind="fft"))
+print("\nprime range-line plan:", rg3_plan.describe())
+for row, rg0 in enumerate((173, 611, 1301, 1949)):
+    pk = int(np.argmax(np.abs(np.asarray(rc3)[row])))
+    expect = rg0 + chirp3 - 1
+    ok = abs(pk - expect) <= 4
+    print(f"  range line {row}: peak {pk:4d}/{expect:4d} "
+          f"{'OK' if ok else 'MISS'}")

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import re
 from typing import Optional
 
@@ -40,6 +41,7 @@ __all__ = [
     "gpu_program_report",
     "gpu_plan_report",
     "xla_gpu_fft_bytes",
+    "bluestein_report",
 ]
 
 #: Fixed per-collective launch/dispatch charge (seconds).  Wire bytes are
@@ -212,6 +214,65 @@ def fft_pass_report(
     if n2 is not None:
         report["n2"] = n2
     return report
+
+
+def bluestein_report(
+    n: int, batch: int = 1, pad: Optional[int] = None, hw: HW = V5E
+) -> dict:
+    """Modeled cost of the Bluestein chirp-conv program for a non-pow2 ``n``
+    against a *hypothetical* native mixed-radix transform of the same length.
+
+    The chirp-conv route runs two transforms of the pow2 pad length
+    ``M = bluestein_pad(n)`` (the B̂ spectrum is interned at plan time, so
+    only the forward pad-FFT and pad-IFFT cost runtime arithmetic) plus the
+    O(n + M) chirp multiplies.  Against a native 5·n·log₂n yardstick that is
+    a ~2·(M/n)·(log M / log n) arithmetic overhead — the classic "up to 3×
+    pad, ~6× flops" Bluestein tax, reported here per size so the choice is
+    observable in every dry-run artifact rather than folklore.
+    """
+    from repro.core import limits, plan as plan_lib  # local: analysis stays lazy
+
+    if n > 1 and not (n & (n - 1)):
+        raise ValueError(
+            f"n={n} is a power of two — it runs the native schedules; the "
+            f"Bluestein report covers the non-pow2 route"
+        )
+    m_pad = limits.bluestein_pad(n) if pad is None else pad
+    prog = plan_lib.compile_bluestein(n, pad)
+    passes = []
+    total = 0
+    for i, p in enumerate(prog):
+        nbytes = plan_lib.pass_hbm_bytes(p, batch)
+        passes.append(
+            {
+                "pass": i,
+                "kind": p.kind,
+                "stage": p.stage,
+                "n": p.n,
+                "hbm_bytes": nbytes,
+            }
+        )
+        total += nbytes
+    f32 = 4
+    log2 = math.log2
+    flops = batch * (2 * 5.0 * m_pad * log2(m_pad) + 8.0 * (2 * n + m_pad))
+    mixed_flops = batch * 5.0 * n * max(log2(n), 1.0)
+    mixed_bytes = 2 * batch * n * 2 * f32  # one signal round trip
+    return {
+        "n": n,
+        "pad": m_pad,
+        "batch": batch,
+        "pad_ratio": m_pad / n,
+        "hbm_round_trips": len(prog),
+        "passes": passes,
+        "modeled_hbm_bytes": total,
+        "memory_s": total / hw.hbm_bw,
+        "modeled_flops": flops,
+        "mixed_radix_flops": mixed_flops,
+        "mixed_radix_hbm_bytes": mixed_bytes,
+        "flops_overhead": flops / mixed_flops,
+        "hbm_overhead": total / mixed_bytes,
+    }
 
 
 def _gpu_fallback_round_trips(p) -> int:

@@ -45,6 +45,7 @@ def fft_conv(
     backend: str | None = None,
     overlap_save: bool | None = None,
     tune: str | None = None,
+    pad: str = "pow2",
 ) -> jax.Array:
     """Causal convolution of ``x`` with filter ``h`` along ``axis``.
 
@@ -52,7 +53,15 @@ def fft_conv(
     convolution), transforms through cached :class:`PlannedFFT` handles
     (rfft forward, irfft inverse — one plan pair per padded length),
     multiplies spectra, and truncates to the first L samples (causal) — the
-    standard overlap-free long-conv used by Hyena/S4 layers.
+    standard overlap-free long-conv used by Hyena/S4 layers.  ``L`` and
+    ``Lh`` are arbitrary — nothing requires powers of two.
+
+    ``pad='exact'`` transforms at exactly ``n = L + Lh - 1`` instead,
+    routing non-pow2 lengths through the planner's Bluestein chirp-conv
+    leaves.  The exact length keeps the spectrum bin-aligned to the true
+    linear-convolution length (useful when the spectrum itself is consumed);
+    for raw throughput the default pow2 pad is never slower, since Bluestein
+    internally pads to ``next_pow2(2n-1)``.
 
     ``overlap_save=None`` (default) auto-routes to
     :func:`repro.core.overlap.fft_conv_os` whenever the one-shot padded
@@ -69,11 +78,15 @@ def fft_conv(
     Inputs are computed in float32 regardless of dtype (like
     :func:`fft_conv2d`); the output is cast back to the input dtype.
     """
+    if pad not in ("pow2", "exact"):
+        raise ValueError(f"pad must be 'pow2' or 'exact', got {pad!r}")
     x = jnp.asarray(x)
     L = x.shape[axis]
     Lh = h.shape[-1]
-    n = next_pow2(L + Lh - 1)
-    if overlap_save or (overlap_save is None and n > plan_lib.FUSED_MAX):
+    n = L + Lh - 1 if pad == "exact" else next_pow2(L + Lh - 1)
+    if pad == "pow2" and (
+        overlap_save or (overlap_save is None and n > plan_lib.FUSED_MAX)
+    ):
         from repro.core import overlap  # lazy: conv loads before overlap at package init
 
         return overlap.fft_conv_os(

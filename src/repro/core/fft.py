@@ -107,7 +107,11 @@ def _is_pow2(n: int) -> bool:
 class FFTSpec:
     """What to transform — the hashable key a :class:`PlannedFFT` is built for.
 
-    n:          transform length along ``axis`` (power of two).  For
+    n:          transform length along ``axis``.  Any length ≥ 1: powers of
+                two run the paper's native schedules; other lengths compile
+                into the planner's Bluestein chirp-conv leaf (a cached
+                power-of-two circular convolution at ``bluestein_pad(n)``).
+                ``rfft2``/``irfft2`` still require a power of two.  For
                 ``irfft``/``irfft2`` this is the *output* signal length along
                 the last axis; for the 2-D kinds it is the last-axis (row)
                 length and ``n2`` the second-to-last (column) length.
@@ -136,14 +140,23 @@ class FFTSpec:
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown FFT kind {self.kind!r}; one of {KINDS}")
-        if not _is_pow2(self.n):
-            raise ValueError(f"FFT length must be a power of two, got {self.n}")
+        if self.n < 1:
+            raise ValueError(f"FFT length must be >= 1, got {self.n}")
+        if self.kind in ("rfft2", "irfft2") and not _is_pow2(self.n):
+            raise ValueError(
+                f"{self.kind} requires a power-of-two row length, got n={self.n}; "
+                f"non-power-of-two lengths are supported for "
+                f"{_COMPLEX_KINDS + ('rfft', 'irfft', 'fft2', 'ifft2')} via the "
+                f"Bluestein chirp-conv route"
+            )
         if self.kind in ("rfft", "irfft", "rfft2", "irfft2") and self.n < 2:
             raise ValueError(f"{self.kind} length must be >= 2, got {self.n}")
         if self.kind in _2D_KINDS:
             if self.n2 is None or not _is_pow2(self.n2):
                 raise ValueError(
-                    f"{self.kind} needs a power-of-two n2, got {self.n2}"
+                    f"{self.kind} needs a power-of-two n2 (column length), got "
+                    f"{self.n2}; only the last (row) axis takes non-power-of-two "
+                    f"lengths (Bluestein route)"
                 )
             if self.axis != -1:
                 raise ValueError(f"{self.kind} always transforms the last two axes")
@@ -173,6 +186,10 @@ class BackendCapabilities:
                          it still serve 2-D specs — the handle composes the
                          cached row and ``axis=-2`` column 1-D plans of the
                          same backend.
+    bluestein:           the backend executes non-power-of-two lengths (the
+                         planner's Bluestein chirp-conv leaves).  Backends
+                         without it (``stockham``) disclaim non-pow2 specs
+                         during negotiation.
     """
 
     platforms: frozenset = frozenset({"cpu", "gpu", "tpu"})
@@ -181,6 +198,7 @@ class BackendCapabilities:
     max_n: Optional[int] = None
     priority: int = 10
     native_2d: bool = False
+    bluestein: bool = False
 
     def supports(self, spec: FFTSpec, platform: str) -> bool:
         if platform not in self.platforms:
@@ -188,6 +206,8 @@ class BackendCapabilities:
         if spec.precision not in self.precisions:
             return False
         if self.max_n is not None and max(spec.n, spec.n2 or 0) > self.max_n:
+            return False
+        if not self.bluestein and not _is_pow2(spec.n):
             return False
         return True
 
@@ -411,17 +431,26 @@ def _materialize_luts(
         from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
 
         for p in fft_plan.passes:
+            # Bluestein inner-conv passes pin their own direction.
+            eff = p.inverse if p.inverse is not None else inverse
             if p.kind == "reorder":
                 continue
-            if p.kind == "direct":
-                luts.append(kernel_ops._direct_luts(p.n, inverse))
+            if p.kind == "bluestein":
+                luts.append(kernel_ops._bluestein_luts(p, eff))
+            elif p.kind == "direct":
+                luts.append(kernel_ops._direct_luts(p.n, eff))
             else:
-                luts.append(kernel_ops._fused_luts(p.n1, p.n2, inverse))
+                luts.append(kernel_ops._fused_luts(p.n1, p.n2, eff))
             if p.twiddle_after is not None:
-                luts.append(kernel_ops._pass_twiddle_luts(*p.twiddle_after, inverse))
+                luts.append(kernel_ops._pass_twiddle_luts(*p.twiddle_after, eff))
         return tuple(luts)
     for p in fft_plan.leaf_passes:
-        if p.kind == "direct":
+        if p.kind == "bluestein":
+            # Chirp planes + B̂ spectrum, interned like every twiddle table.
+            luts.append(tw.bluestein_chirp(p.n, inverse))
+            luts.append(tw.bluestein_spectrum(p.n, p.n1, inverse))
+            luts.append(tw.bluestein_postchirp(p.n, inverse))
+        elif p.kind == "direct":
             luts.append(tw.dft_matrix(p.n, inverse))
         else:
             luts.append(tw.dft_matrix(p.n1, inverse))
@@ -604,6 +633,7 @@ class PlannedFFT:
                 head
                 + plan_lib.describe_program(self.fft_plan)
                 + self._describe_tuned()
+                + self._describe_bluestein()
                 + self._describe_gpu()
             )
         parts = [plan_lib.describe_program(c.fft_plan) for c in self.children
@@ -611,7 +641,24 @@ class PlannedFFT:
         s = head + " | ".join(parts)
         if self.epilogue is not None:
             s += f"; epilogue pass: {self.epilogue.kind} n={self.epilogue.n}"
-        return s + self._describe_gpu()
+        return s + self._describe_bluestein() + self._describe_gpu()
+
+    def _describe_bluestein(self) -> str:
+        """Chirp-conv pad and modeled overhead vs a hypothetical mixed-radix
+        transform, appended for non-power-of-two lengths so the Bluestein tax
+        is visible next to the schedule that pays it."""
+        n = self.spec.n
+        if n < 2 or not (n & (n - 1)):
+            return ""
+        from repro.analysis import roofline as rl  # lazy: analysis layer
+
+        pad = (self.tuned or {}).get("bluestein_pad")
+        rep = rl.bluestein_report(n, pad=pad)
+        return (
+            f"; bluestein: pad {rep['pad']} ({rep['pad_ratio']:.2f}x), "
+            f"{rep['flops_overhead']:.1f}x flops vs mixed-radix, "
+            f"{rep['hbm_round_trips']} hbm round trips"
+        )
 
     def _describe_gpu(self) -> str:
         """Shared-memory bytes + global-memory round trips, appended for GPU
@@ -881,10 +928,16 @@ class PlannedFFT:
         if x.shape[-1] != n:
             raise ValueError(f"rfft planned for n={n}, got axis length {x.shape[-1]}")
         (inner,) = self.children
-        zr = x[..., 0::2]  # even samples  -> real plane
-        zi = x[..., 1::2]  # odd samples   -> imag plane
-        Zr, Zi = inner._complex(zr, zi, inverse=False)
-        Xr, Xi = self._recomb_fwd(Zr, Zi)
+        if n % 2:
+            # Odd length: full complex transform (Bluestein leaf), sliced to
+            # the n//2+1 Hermitian bins.
+            Xr, Xi = inner._complex(x, jnp.zeros_like(x), inverse=False)
+            Xr, Xi = Xr[..., : n // 2 + 1], Xi[..., : n // 2 + 1]
+        else:
+            zr = x[..., 0::2]  # even samples  -> real plane
+            zi = x[..., 1::2]  # odd samples   -> imag plane
+            Zr, Zi = inner._complex(zr, zi, inverse=False)
+            Xr, Xi = self._recomb_fwd(Zr, Zi)
         if move:
             Xr, Xi = self._from_last(Xr), self._from_last(Xi)
         return Xr, Xi
@@ -904,9 +957,16 @@ class PlannedFFT:
         if Xr.shape[-1] != m + 1:
             raise ValueError(f"irfft expects n//2+1={m + 1} bins, got {Xr.shape[-1]}")
         (inner,) = self.children
-        Zr, Zi = self._recomb_inv(Xr, Xi)
-        zr, zi = inner._complex(Zr, Zi, inverse=True)
-        out = jnp.stack([zr, zi], axis=-1).reshape(*zr.shape[:-1], n)
+        if n % 2:
+            # Odd length: Hermitian-extend the bins to the full spectrum,
+            # complex inverse (Bluestein leaf), real part.
+            Zr = jnp.concatenate([Xr, jnp.flip(Xr[..., 1:], -1)], axis=-1)
+            Zi = jnp.concatenate([Xi, -jnp.flip(Xi[..., 1:], -1)], axis=-1)
+            out, _ = inner._complex(Zr, Zi, inverse=True)
+        else:
+            Zr, Zi = self._recomb_inv(Xr, Xi)
+            zr, zi = inner._complex(Zr, Zi, inverse=True)
+            out = jnp.stack([zr, zi], axis=-1).reshape(*zr.shape[:-1], n)
         if move:
             out = self._from_last(out)
         return out
@@ -1042,6 +1102,7 @@ def _build_plan(
             spec.n,
             cfg["fused_max"] if cfg else plan_lib.FUSED_MAX,
             cfg.get("direct_max", plan_lib.DIRECT_MAX) if cfg else plan_lib.DIRECT_MAX,
+            pad=cfg.get("bluestein_pad") if cfg else None,
         )
         return PlannedFFT(
             spec,
@@ -1097,6 +1158,13 @@ def _build_plan(
         return PlannedFFT(spec, entry, None, children=(rows, cols))
 
     inverse = kind in ("irfft", "irfft2")
+    if kind in ("rfft", "irfft") and spec.n % 2:
+        # Odd length: the even/odd complex packing needs an even split, so
+        # the real transform runs as a full-length complex Bluestein FFT
+        # (imag plane zero) sliced to the n//2+1 Hermitian bins — no
+        # recombination epilogue.
+        inner = child(spec.n, inverse, spec.batch_hint)
+        return PlannedFFT(spec, entry, None, children=(inner,))
     m = spec.n // 2
     bins = (1, 1, m + 1)
     epilogue = plan_lib.Pass(
@@ -1147,6 +1215,12 @@ def _stockham_backend(xr, xi, *, inverse, planned, axis=-1):
 
 def _xla_backend(xr, xi, *, inverse, planned, axis=-1):
     n = planned.fft_plan.n
+    if n & (n - 1):
+        # Non-pow2: traced Bluestein (chirp → cached pow2 conv → chirp).
+        f = fft_xla.bluestein_fft
+        if axis == -2:
+            f = _swap_to_last(f)
+        return f(xr, xi, inverse=inverse)
     if axis == -2:
         if n <= plan_lib.DIRECT_MAX and n > 1:
             # Transpose-free column DFT: contract axis -2 directly (the XLA
@@ -1204,7 +1278,9 @@ register_backend(
 register_backend(
     "xla",
     _xla_backend,
-    BackendCapabilities(preferred_platforms=frozenset({"cpu", "gpu"})),
+    BackendCapabilities(
+        preferred_platforms=frozenset({"cpu", "gpu"}), bluestein=True
+    ),
 )
 register_backend(
     "pallas",
@@ -1213,6 +1289,7 @@ register_backend(
         platforms=frozenset({"cpu", "tpu"}),  # cpu = interpret mode
         preferred_platforms=frozenset({"tpu"}),
         native_2d=True,  # executes joint rows+cols programs in one call
+        bluestein=True,
     ),
 )
 # The paper's native hardware.  Registered after xla so the registration-
@@ -1225,6 +1302,7 @@ register_backend(
     BackendCapabilities(
         platforms=frozenset({"cpu", "gpu"}),  # cpu = interpret mode
         preferred_platforms=frozenset({"gpu"}),
+        bluestein=True,
     ),
     claims=_pallas_gpu_claims,
 )
@@ -1236,7 +1314,9 @@ register_backend(
 
 
 def fft(x: ArrayOrPlanes, *, axis: int = -1, backend: Optional[str] = None) -> ArrayOrPlanes:
-    """Complex FFT over ``axis`` (power-of-two length), via a cached plan."""
+    """Complex FFT over ``axis`` (any length ≥ 1), via a cached plan.
+
+    Non-power-of-two lengths route through the planner's Bluestein leaf."""
     n = int(_input_shape(x)[axis])
     return plan(FFTSpec(n=n, kind="fft", axis=axis), backend=backend)(x)
 

@@ -34,6 +34,7 @@ Planes = Tuple[jax.Array, jax.Array]
 __all__ = [
     "stockham_fft",
     "four_step_fft",
+    "bluestein_fft",
     "direct_dft",
     "cmul",
     "cmatmul",
@@ -244,3 +245,36 @@ def four_step_fft(xr, xi, *, inverse: bool = False) -> Planes:
         inv = np.float32(1.0 / n)
         yr, yi = yr * inv, yi * inv
     return yr, yi
+
+
+def bluestein_fft(
+    xr, xi, *, inverse: bool = False, pad: int | None = None
+) -> Planes:
+    """Arbitrary-length DFT over the last axis via Bluestein's chirp conv.
+
+    The traced (pure-XLA) realization of the same pipeline
+    ``core.plan.compile_bluestein`` schedules for the Pallas kernels:
+    chirp pre-multiply → zero-pad to ``M = next_pow2(2n−1)`` → forward
+    :func:`four_step_fft` at M → multiply by the host-cached chirp spectrum
+    B̂ → inverse four-step at M (its 1/M folded by the engine) → slice to
+    ``n`` → chirp post-multiply (1/n folded for ``inverse``).  All LUTs come
+    from the shared :mod:`repro.core.twiddle` caches, so the traced path
+    and the kernels intern one set of chirp tables per (n, pad, direction).
+    """
+    n = xr.shape[-1]
+    if not (n & (n - 1)):
+        return four_step_fft(xr, xi, inverse=inverse)
+    from repro.core.limits import bluestein_pad
+
+    m_pad = bluestein_pad(n) if pad is None else pad
+    ar, ai = tw.bluestein_chirp(n, inverse)
+    br, bi = tw.bluestein_spectrum(n, m_pad, inverse)
+    pr, pi = tw.bluestein_postchirp(n, inverse)
+    yr, yi = cmul(xr, xi, jnp.asarray(ar), jnp.asarray(ai))
+    widths = [(0, 0)] * (yr.ndim - 1) + [(0, m_pad - n)]
+    yr, yi = jnp.pad(yr, widths), jnp.pad(yi, widths)
+    fr, fi = four_step_fft(yr, yi)
+    fr, fi = cmul(fr, fi, jnp.asarray(br), jnp.asarray(bi))
+    gr, gi = four_step_fft(fr, fi, inverse=True)
+    gr, gi = gr[..., :n], gi[..., :n]
+    return cmul(gr, gi, jnp.asarray(pr), jnp.asarray(pi))

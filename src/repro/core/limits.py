@@ -22,8 +22,11 @@ __all__ = [
     "VMEM_BUDGET",
     "GPU_SMEM_BUDGETS",
     "GPU_SMEM_DEFAULT",
+    "BLUESTEIN_MIN",
     "memory_budget",
     "next_pow2",
+    "next_fast_len",
+    "bluestein_pad",
 ]
 
 #: Largest N executed as a single direct DFT matmul (one (B,N)x(N,N) GEMM).
@@ -100,5 +103,26 @@ def memory_budget(device_kind: str | None = None) -> int:
     return VMEM_BUDGET
 
 
+#: Smallest non-power-of-two length the Bluestein chirp-conv leaf accepts.
+#: n = 1 is the identity transform and n = 2^k routes to the native pow2
+#: programs, so the chirp path only ever sees n ≥ 2 composites/primes.
+BLUESTEIN_MIN = 2
+
+
 def next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
+
+
+def next_fast_len(n: int) -> int:
+    """Smallest length ≥ ``n`` this engine transforms natively (pow2 —
+    every leaf kernel, LUT builder and roofline account is pow2-shaped;
+    arbitrary ``n`` itself routes through the Bluestein chirp leaf)."""
+    return next_pow2(max(n, 1))
+
+
+def bluestein_pad(n: int) -> int:
+    """The chirp convolution length for a length-``n`` Bluestein transform:
+    the circular conv must hold the 2n−1 support of a[j]·b[k−j], padded to
+    the next power of two so the inner FFT pair stays on the native pow2
+    engines.  This is the *floor* — the tuner may pick a larger pow2 pad."""
+    return next_pow2(max(2 * n - 1, 1))

@@ -44,7 +44,13 @@ import dataclasses
 import functools
 import math
 
-from repro.core.limits import DIRECT_MAX, FUSED_MAX, VMEM_BUDGET, memory_budget
+from repro.core.limits import (
+    DIRECT_MAX,
+    FUSED_MAX,
+    VMEM_BUDGET,
+    bluestein_pad,
+    memory_budget,
+)
 
 __all__ = [
     "DIRECT_MAX",
@@ -56,6 +62,7 @@ __all__ = [
     "plan_fft2",
     "compile_passes",
     "compile_passes2d",
+    "compile_bluestein",
     "joint2d_supported",
     "program_factors",
     "balanced_split",
@@ -131,6 +138,21 @@ class Pass:
     twiddle_after: tuple | None = None
     order: str = "pencil"
     axis: int = -1
+    #: Bluestein chirp-conv leaves only: which piece of the chirp pipeline
+    #: this pass executes.  Fused regime: ``"fwd"`` (chirp-pre + zero-pad +
+    #: pad-length FFT + ⊙B̂, one call) then ``"inv"`` (pad-length IFFT +
+    #: slice + chirp-post, one call).  Split regime (pad > FUSED_MAX):
+    #: ``"pre"`` / ``"mul"`` / ``"post"`` elementwise chirp passes
+    #: sandwiching the pad length's own compiled pow2 program.  For a
+    #: bluestein pass ``n`` is the logical transform length and ``n1`` the
+    #: conv pad length M.
+    stage: str = ""
+    #: Transform-direction override for the passes INSIDE a Bluestein conv:
+    #: the inner pad-length FFT/IFFT pair always runs forward-then-inverse
+    #: regardless of the outer transform's direction (which only flips the
+    #: chirp LUTs).  ``None`` — every non-Bluestein program — defers to the
+    #: executor's program-level ``inverse`` flag.
+    inverse: bool | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,6 +258,11 @@ def compile_passes(
     """
     if order not in ("natural", "pencil"):
         raise ValueError(f"order must be 'natural' or 'pencil', got {order!r}")
+    if not _is_pow2(n):
+        # Non-pow2 lengths compile to the Bluestein chirp-conv program —
+        # natural-order by construction (the post-chirp slice IS the
+        # output), so the ``order`` request is moot.
+        return compile_bluestein(n, None, fused_max, direct_max)
     fs = program_factors(n, fused_max)
     last = len(fs) - 1
     passes: list[Pass] = []
@@ -274,6 +301,78 @@ def compile_passes(
         passes.append(
             Pass(kind="reorder", n=n, view_in=flat, view_out=flat, order="natural")
         )
+    return tuple(passes)
+
+
+@functools.lru_cache(maxsize=256)
+def compile_bluestein(
+    n: int,
+    pad: int | None = None,
+    fused_max: int = FUSED_MAX,
+    direct_max: int = DIRECT_MAX,
+) -> tuple[Pass, ...]:
+    """Compile the Bluestein chirp-conv pass program for a non-pow2 ``n``.
+
+    The transform is one circular convolution at pad length
+    ``M = next_pow2(2n−1)`` (or a caller/tuner-chosen larger pow2 ``pad``)
+    between the chirp-modulated signal and the conjugate chirp, bracketed
+    by elementwise chirp multiplies:
+
+    * ``M ≤ fused_max`` — TWO passes, the §2.3.2 call-count discipline kept:
+      ``stage="fwd"`` fuses chirp-pre, the zero-pad and the forward pad-FFT
+      ⊙ B̂ into one kernel; ``stage="inv"`` fuses the inverse pad-FFT, the
+      slice back to ``n`` and the chirp-post into the second.
+    * ``M > fused_max`` — the pad length's own pow2 split program runs the
+      conv: ``pre`` → forward program of M → ``mul`` (⊙B̂) → inverse
+      program of M → ``post``, with each inner pass's direction pinned via
+      :attr:`Pass.inverse` (the outer fft/ifft choice only flips the chirp
+      LUTs, never the conv).
+    """
+    if _is_pow2(n):
+        raise ValueError(f"n={n} is a power of two; use compile_passes")
+    if n < 2:
+        raise ValueError(f"Bluestein lengths start at 2, got {n}")
+    m_pad = bluestein_pad(n) if pad is None else pad
+    if not _is_pow2(m_pad) or m_pad < 2 * n - 1:
+        raise ValueError(
+            f"bluestein pad must be a power of two ≥ 2n-1 = {2 * n - 1}, "
+            f"got {m_pad}"
+        )
+    if m_pad <= fused_max:
+        return (
+            Pass(
+                kind="bluestein", n=n, n1=m_pad,
+                view_in=(1, 1, n), view_out=(1, 1, m_pad),
+                order="natural", stage="fwd",
+            ),
+            Pass(
+                kind="bluestein", n=n, n1=m_pad,
+                view_in=(1, 1, m_pad), view_out=(1, 1, n),
+                order="natural", stage="inv",
+            ),
+        )
+    inner = compile_passes(m_pad, fused_max, "natural", direct_max)
+    if any(p.kind == "reorder" for p in inner):
+        raise NotImplementedError(
+            f"bluestein pads beyond fused_max² ({fused_max**2}) would need "
+            f"a reordered inner program; pad={m_pad}"
+        )
+    flat_n = (1, 1, n)
+    flat_m = (1, 1, m_pad)
+    passes = [
+        Pass(kind="bluestein", n=n, n1=m_pad, view_in=flat_n,
+             view_out=flat_m, order="natural", stage="pre"),
+    ]
+    passes.extend(dataclasses.replace(p, inverse=False) for p in inner)
+    passes.append(
+        Pass(kind="bluestein", n=n, n1=m_pad, view_in=flat_m,
+             view_out=flat_m, order="natural", stage="mul")
+    )
+    passes.extend(dataclasses.replace(p, inverse=True) for p in inner)
+    passes.append(
+        Pass(kind="bluestein", n=n, n1=m_pad, view_in=flat_m,
+             view_out=flat_n, order="natural", stage="post")
+    )
     return tuple(passes)
 
 
@@ -346,11 +445,36 @@ def compile_passes2d(
 
 @functools.lru_cache(maxsize=512)
 def plan_fft(
-    n: int, fused_max: int = FUSED_MAX, direct_max: int = DIRECT_MAX
+    n: int,
+    fused_max: int = FUSED_MAX,
+    direct_max: int = DIRECT_MAX,
+    pad: int | None = None,
 ) -> FFTPlan:
-    """Plan a length-``n`` power-of-two complex FFT."""
+    """Plan a length-``n`` complex FFT.
+
+    Power-of-two lengths compile to the native direct/fused/split programs;
+    any other ``n ≥ 2`` compiles to the Bluestein chirp-conv program
+    (:func:`compile_bluestein`), with ``pad`` optionally overriding the
+    conv pad length (the tuner's knob — pow2, ≥ 2n−1).
+    """
+    if n < 1:
+        raise ValueError(f"FFT length must be positive, got {n}")
     if not _is_pow2(n):
-        raise ValueError(f"FFT length must be a power of two, got {n}")
+        passes = compile_bluestein(n, pad, fused_max, direct_max)
+        m_pad = passes[0].n1
+        leaves = [passes[0]]  # the chirp leaf: one entry per p.n == n
+        if m_pad > fused_max:
+            # Split-regime conv: the pad length's own leaves tile the
+            # inner program's kernels.
+            leaves.extend(plan_fft(m_pad, fused_max, direct_max).leaf_passes)
+        return FFTPlan(
+            n=n,
+            levels=(),
+            leaf_passes=tuple(sorted(leaves, key=lambda p: p.n)),
+            passes=passes,
+        )
+    if pad is not None:
+        raise ValueError("pad applies only to non-power-of-two lengths")
     levels: list[tuple[int, int]] = []
     m = n
     while m > fused_max:
@@ -392,13 +516,14 @@ def plan_fft2(
     per-axis child plans and no transposes between the axes.
     """
     row_plan = plan_fft(n, fused_max, direct_max)
-    leaf_lengths = {p.n for p in row_plan.leaf_passes}
+    # Keep the row plan's leaves verbatim (a non-pow2 row length's leaf is
+    # the Bluestein chirp pass itself — not re-derivable from its length);
+    # strip-mined columns contribute one leaf per column factor.
+    leaf_map = {p.n: p for p in row_plan.leaf_passes}
     if n2 > 1:
-        # Strip-mined columns contribute one leaf per column factor.
-        leaf_lengths.update(program_factors(n2, fused_max))
-    leaves = tuple(
-        sorted((_leaf_pass(m, direct_max) for m in leaf_lengths), key=lambda p: p.n)
-    )
+        for m in program_factors(n2, fused_max):
+            leaf_map.setdefault(m, _leaf_pass(m, direct_max))
+    leaves = tuple(sorted(leaf_map.values(), key=lambda p: p.n))
     return FFTPlan(
         n=n,
         levels=row_plan.levels,
@@ -417,6 +542,24 @@ def vmem_bytes(p: Pass, batch_tile: int) -> int:
     half of it, leaving room for Mosaic's double buffering).
     """
     f32 = 4
+    if p.kind == "bluestein":
+        # The chirp leaf's working set is pad-sized: the padded signal tile
+        # in/mid/out, the inner pad-FFT's LUTs (fwd/inv stages only), and
+        # the (1, n)/(1, M) chirp planes.
+        m_pad = p.n1
+        sig = batch_tile * m_pad * 2 * f32
+        chirps = (p.n + m_pad) * 2 * f32
+        mats = 0
+        if p.stage in ("fwd", "inv"):
+            inner = _leaf_pass(m_pad)
+            if inner.kind == "direct":
+                mats = m_pad * m_pad * 2 * f32
+            else:
+                mats = (
+                    inner.n1 * inner.n1 + inner.n2 * inner.n2
+                    + inner.n1 * inner.n2
+                ) * 2 * f32
+        return 3 * sig + mats + chirps
     if p.kind == "direct":
         sig = batch_tile * p.n * 2 * f32
         mats = p.n * p.n * 2 * f32
@@ -452,6 +595,21 @@ def gpu_smem_bytes(p: Pass, batch_tile: int) -> int:
     budget would force every tile to 1 and misreport the paper's metric.
     """
     f32 = 4
+    if p.kind == "bluestein":
+        # Pad-sized tiles; the inner pad-FFT's LUTs pipeline in stripes and
+        # the chirp planes are 1-row operands (charged whole, they're tiny
+        # next to the signal tiles).
+        m_pad = p.n1
+        sig = batch_tile * m_pad * 2 * f32
+        chirps = (p.n + m_pad) * 2 * f32
+        stripes = 0
+        if p.stage in ("fwd", "inv"):
+            inner = _leaf_pass(m_pad)
+            if inner.kind == "direct":
+                stripes = GPU_LUT_STAGE * m_pad * 2 * f32
+            else:
+                stripes = GPU_LUT_STAGE * (inner.n1 + 2 * inner.n2) * 2 * f32
+        return 3 * sig + stripes + chirps
     if p.kind == "direct":
         sig = batch_tile * p.n * 2 * f32
         stripe = GPU_LUT_STAGE * p.n * 2 * f32
@@ -490,6 +648,24 @@ def pass_hbm_bytes(p: Pass, batch: int = 1, other: int = 1) -> int:
     f32 = 4
     if p.kind == "reorder":
         return 2 * batch * other * p.n * 2 * f32
+    if p.kind == "bluestein":
+        # In and out widths differ (n → M on the way in, M → n back out);
+        # chirp planes stream once, and the fused fwd/inv stages carry the
+        # inner pad-FFT's LUTs.
+        n_in = p.view_in[2] if p.view_in else p.n
+        n_out = p.view_out[2] if p.view_out else p.n
+        sig = batch * other * (n_in + n_out) * 2 * f32
+        luts = (p.n + p.n1) * 2 * f32
+        if p.stage in ("fwd", "inv"):
+            inner = _leaf_pass(p.n1)
+            if inner.kind == "direct":
+                luts += p.n1 * p.n1 * 2 * f32
+            else:
+                luts += (
+                    inner.n1 * inner.n1 + inner.n2 * inner.n2
+                    + inner.n1 * inner.n2
+                ) * 2 * f32
+        return sig + luts
     pencils, _stride, f = p.view_in if p.view_in else (1, 1, p.n)
     sig = batch * other * pencils * f * 2 * f32
     tw = 0
@@ -529,6 +705,10 @@ def program_hbm_bytes(
 def _pass_chunk_bytes(p: Pass, c: int) -> int:
     """VMEM working set of one grid step of a pencil pass with chunk ``c``."""
     f32 = 4
+    if p.kind == "bluestein":
+        # Whole-signal chirp passes are batch-tiled, never chunked; charge
+        # the tile model so a defensive caller still gets a sane bound.
+        return vmem_bytes(p, c)
     sig = p.n * c * 2 * f32
     tw = sig if p.twiddle_after else 0
     if p.kind == "direct":
@@ -573,6 +753,19 @@ def describe_program(p: FFTPlan, batch: int = 1) -> str:
         mb = pass_hbm_bytes(ps, batch, pass_other(ps, p)) / 1e6
         if ps.kind == "reorder":
             parts.append(f"pass {i}: digit-reversal reorder (~{mb:.1f} MB)")
+            continue
+        if ps.kind == "bluestein":
+            stage_txt = {
+                "fwd": "chirp-pre + pad-FFT ⊙ B̂ (fused)",
+                "inv": "pad-IFFT + chirp-post (fused)",
+                "pre": "chirp pre-multiply + zero-pad",
+                "mul": "⊙ B̂ chirp spectrum",
+                "post": "slice + chirp post-multiply",
+            }.get(ps.stage, ps.stage)
+            parts.append(
+                f"pass {i}: bluestein n={ps.n} pad={ps.n1} {stage_txt} "
+                f"(~{mb:.1f} MB)"
+            )
             continue
         pencils, stride, f = ps.view_in
         algo = (

@@ -406,13 +406,15 @@ class TuningSpace:
             pick_tile = lambda p: plan_lib.pick_batch_tile(p, budget)  # noqa: E731
             tile_bytes = plan_lib.vmem_bytes
 
-        def build(fused_max, direct_max=DIRECT_MAX):
+        def build(fused_max, direct_max=DIRECT_MAX, pad=None):
             if n2 is not None:
                 return plan_lib.plan_fft2(n, n2, fused_max, direct_max)
-            return plan_lib.plan_fft(n, fused_max, direct_max)
+            return plan_lib.plan_fft(n, fused_max, direct_max, pad=pad)
 
-        def config_for(fused_max, chunk_shift, tile_shift, direct_max=DIRECT_MAX):
-            plan = build(fused_max, direct_max)
+        def config_for(
+            fused_max, chunk_shift, tile_shift, direct_max=DIRECT_MAX, pad=None
+        ):
+            plan = build(fused_max, direct_max, pad)
             chunks = {}
             for i, p in enumerate(plan.passes):
                 if p.kind == "reorder":
@@ -429,22 +431,29 @@ class TuningSpace:
             for p in plan.leaf_passes:
                 base = pick_tile(p)
                 tiles[str(p.n)] = max(1, base >> tile_shift)
-            return {
+            cfg = {
                 "fused_max": fused_max,
                 "direct_max": direct_max,
                 "chunks": chunks,
                 "batch_tiles": tiles,
             }
+            if pad is not None:
+                cfg["bluestein_pad"] = pad
+            return cfg
 
-        def modeled(fused_max, direct_max=DIRECT_MAX):
-            plan = build(fused_max, direct_max)
+        def modeled(fused_max, direct_max=DIRECT_MAX, pad=None):
+            plan = build(fused_max, direct_max, pad)
             shape2d = (n2, n) if n2 is not None else None
             return plan_lib.program_hbm_bytes(
                 plan.passes, spec.batch_hint or 1, shape2d
             )
 
         def vmem_of(config):
-            plan = build(config["fused_max"], config.get("direct_max", DIRECT_MAX))
+            plan = build(
+                config["fused_max"],
+                config.get("direct_max", DIRECT_MAX),
+                config.get("bluestein_pad"),
+            )
             worst = 0
             for i, p in enumerate(plan.passes):
                 if p.kind == "reorder":
@@ -474,22 +483,36 @@ class TuningSpace:
         for dm in (DIRECT_MAX // 2, DIRECT_MAX // 4):
             if build(FUSED_MAX, dm).passes != build(FUSED_MAX).passes:
                 fms.append((FUSED_MAX, dm))
+        # Chirp pad-length alternatives for non-pow2 (Bluestein) 1-D specs:
+        # the minimal next_pow2(2n-1) pad first, its doubling second (a
+        # doubled pad can re-factorise the inner conv more favourably; the
+        # model usually prunes it — extra signal bytes — but measurement
+        # gets to disagree).
+        pads = [None]
+        if n2 is None and n & (n - 1):
+            m0 = limits.bluestein_pad(n)
+            pads = [m0, 2 * m0]
         cands, seen = [], set()
-        for fm, dm in fms:
-            for chunk_shift, tile_shift in ((0, 0), (1, 0), (2, 0), (0, 1)):
-                cfg = config_for(fm, chunk_shift, tile_shift, dm)
-                sig = json.dumps(cfg, sort_keys=True)
-                if sig in seen:
-                    continue
-                seen.add(sig)
-                cands.append((cfg, modeled(fm, dm), vmem_of(cfg)))
+        for pad in pads:
+            for fm, dm in fms:
+                for chunk_shift, tile_shift in ((0, 0), (1, 0), (2, 0), (0, 1)):
+                    cfg = config_for(fm, chunk_shift, tile_shift, dm, pad)
+                    sig = json.dumps(cfg, sort_keys=True)
+                    if sig in seen:
+                        continue
+                    seen.add(sig)
+                    cands.append((cfg, modeled(fm, dm, pad), vmem_of(cfg)))
 
         def measure(config):
             import jax
             import jax.numpy as jnp
             import numpy as np
 
-            plan = build(config["fused_max"], config.get("direct_max", DIRECT_MAX))
+            plan = build(
+                config["fused_max"],
+                config.get("direct_max", DIRECT_MAX),
+                config.get("bluestein_pad"),
+            )
             chunks = {int(k): v for k, v in config["chunks"].items()}
             tiles = {int(k): v for k, v in config["batch_tiles"].items()}
             b = spec.batch_hint or 2
@@ -827,6 +850,10 @@ def backend_pick(spec, platform: str, tune: Optional[str] = None) -> Optional[st
     if mode == "off":
         return None
     if spec.kind not in ("fft", "ifft") or getattr(spec, "n2", None) is not None:
+        return None
+    if spec.n & (spec.n - 1):
+        # Non-pow2 (Bluestein) specs keep negotiation's answer: the XLA
+        # yardstick models the pow2 four-step, not the chirp-conv program.
         return None
     space = TuningSpace.for_backend(spec, platform)
     return str(space.decide(mode)["backend"])

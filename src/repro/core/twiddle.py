@@ -31,6 +31,9 @@ __all__ = [
     "mulfrac_pow2",
     "traced_twiddle",
     "rfft_recomb_twiddle",
+    "bluestein_chirp",
+    "bluestein_postchirp",
+    "bluestein_spectrum",
 ]
 
 
@@ -181,6 +184,74 @@ def traced_twiddle(
         ang = np.float32(2.0 * np.pi) * mulfrac_pow2(k1, m2, n)
     sign = 1.0 if inverse else -1.0
     return jnp.cos(ang), sign * jnp.sin(ang)
+
+
+def _chirp_angles(n: int) -> np.ndarray:
+    """Chirp phase π·j²/n reduced exactly: j² mod 2n in int64 keeps the
+    sin/cos argument < 2π so float64 → float32 rounding stays at the ulp
+    level for any n the planner accepts (the j² ≈ 1e12 raw argument would
+    lose the phase entirely)."""
+    j = np.arange(n, dtype=np.int64)
+    return (np.pi / n) * ((j * j) % (2 * n)).astype(np.float64)
+
+
+@functools.lru_cache(maxsize=128)
+def bluestein_chirp(n: int, inverse: bool = False):
+    """Bluestein pre-multiply chirp A[j] = exp(∓iπ·j²/n), length n.
+
+    The modulation that turns the DFT's jk cross term into a convolution:
+    jk = (j² + k² − (k−j)²)/2, so X[k] = A[k]·Σ_j (x[j]A[j])·B[k−j] with
+    B the conjugate chirp (:func:`bluestein_spectrum` carries B's padded
+    circular spectrum).  Float32 (real, imag) planes, host-cached like
+    every other LUT.
+    """
+    ang = _chirp_angles(n)
+    sign = 1.0 if inverse else -1.0
+    return (
+        np.cos(ang).astype(np.float32),
+        (sign * np.sin(ang)).astype(np.float32),
+    )
+
+
+@functools.lru_cache(maxsize=128)
+def bluestein_postchirp(n: int, inverse: bool = False):
+    """Bluestein post-multiply chirp — same phasor as the pre-chirp, with
+    the 1/n inverse-DFT normalization folded in for ``inverse=True`` (the
+    same fold-into-the-last-LUT convention the pow2 engines use)."""
+    ang = _chirp_angles(n)
+    sign = 1.0 if inverse else -1.0
+    scale = (1.0 / n) if inverse else 1.0
+    return (
+        (scale * np.cos(ang)).astype(np.float32),
+        (scale * sign * np.sin(ang)).astype(np.float32),
+    )
+
+
+@functools.lru_cache(maxsize=128)
+def bluestein_spectrum(n: int, pad: int, inverse: bool = False):
+    """Length-``pad`` circular spectrum B̂ of the Bluestein kernel chirp.
+
+    b[m] = exp(±iπ·m²/n) wrapped circularly (b_circ[pad−m] = b[m] for
+    1 ≤ m < n) so linear indices k−j ∈ (−n, n) all resolve; the spectrum
+    is computed ONCE on the host in float64 (np.fft) and interned per
+    (n, pad, direction) — the chirp analogue of the texture-cached twiddle
+    tables.  Requires pad ≥ 2n−1 (the conv support) and pow2 pad.
+    """
+    if pad < 2 * n - 1:
+        raise ValueError(f"bluestein pad {pad} < 2n-1 = {2 * n - 1}")
+    if pad & (pad - 1):
+        raise ValueError(f"bluestein pad must be a power of two, got {pad}")
+    ang = _chirp_angles(n)
+    sign = -1.0 if inverse else 1.0  # conjugate of the pre-chirp
+    b = np.cos(ang) + 1j * sign * np.sin(ang)
+    b_circ = np.zeros(pad, dtype=np.complex128)
+    b_circ[:n] = b
+    b_circ[pad - n + 1 :] = b[1:][::-1]
+    spec = np.fft.fft(b_circ)
+    return (
+        spec.real.astype(np.float32),
+        spec.imag.astype(np.float32),
+    )
 
 
 @functools.lru_cache(maxsize=128)

@@ -69,12 +69,17 @@ def gpu_claims(p: plan_lib.Pass) -> bool:
 
     Claimed: ``axis=-1`` direct/fused4 row leaves — whole-signal passes
     and contiguous-row passes (``stride == 1``), including the
-    natural-order fused transposed write.  Unclaimed (→ xla fallback):
-    strided-column passes, reorders, ``axis=-2`` column transforms, and
-    epilogue pass kinds (rfft/irfft recombination).
+    natural-order fused transposed write — and every Bluestein stage
+    (chirp pre/post multiplies, the B̂ product, and the fused pad-conv
+    passes: :mod:`repro.kernels.bluestein` lowers on both backends).
+    Unclaimed (→ xla fallback): strided-column passes, reorders,
+    ``axis=-2`` column transforms, and epilogue pass kinds (rfft/irfft
+    recombination).
     """
-    if p.axis != -1 or p.kind not in ("direct", "fused4"):
+    if p.axis != -1 or p.kind not in ("direct", "fused4", "bluestein"):
         return False
+    if p.kind == "bluestein":
+        return True
     pencils, stride, _f = p.view_in if p.view_in else (1, 1, p.n)
     return pencils == 1 or stride == 1
 
@@ -253,6 +258,38 @@ def _row_transform_xla(xr2, xi2, p: plan_lib.Pass, luts, natural: bool = True):
     return four_step_tile(xr2, xi2, w1r, w1i, tr, ti, w2r, w2i, p.n1, p.n2, natural)
 
 
+def _bluestein_xla_pass(xr, xi, p: plan_lib.Pass, inverse) -> Planes:
+    """One Bluestein program stage, traced through XLA.
+
+    Same interned chirp/B̂ tables as the kernel path; the pad-length
+    transform runs through :func:`repro.core.fft_xla.four_step_fft`
+    (forward for ``fwd``, true inverse — 1/M folded — for ``inv``).
+    """
+    from repro.core import fft_xla
+    from repro.core import twiddle as tw
+
+    n, m_pad = p.n, p.n1
+    if p.stage in ("pre", "fwd"):
+        ar, ai = tw.bluestein_chirp(n, inverse)
+        xr, xi = cmul(xr, xi, jnp.asarray(ar)[None], jnp.asarray(ai)[None])
+        xr = jnp.pad(xr, ((0, 0), (0, m_pad - n)))
+        xi = jnp.pad(xi, ((0, 0), (0, m_pad - n)))
+        if p.stage == "pre":
+            return xr, xi
+        xr, xi = fft_xla.four_step_fft(xr, xi)
+    if p.stage in ("mul", "fwd"):
+        br, bi = tw.bluestein_spectrum(n, m_pad, inverse)
+        return cmul(xr, xi, jnp.asarray(br)[None], jnp.asarray(bi)[None])
+    if p.stage == "inv":
+        xr, xi = fft_xla.four_step_fft(xr, xi, inverse=True)
+    elif p.stage != "post":
+        raise ValueError(f"unknown bluestein stage {p.stage!r}")
+    pr, pi = tw.bluestein_postchirp(n, inverse)
+    return cmul(
+        xr[:, :n], xi[:, :n], jnp.asarray(pr)[None], jnp.asarray(pi)[None]
+    )
+
+
 def _xla_pass(xr, xi, p: plan_lib.Pass, fs, inverse) -> Planes:
     """One unclaimed program pass over (B, n) planes, traced through XLA.
 
@@ -268,6 +305,8 @@ def _xla_pass(xr, xi, p: plan_lib.Pass, fs, inverse) -> Planes:
         xr = xr.reshape(b, *fs).transpose(perm).reshape(b, n)
         xi = xi.reshape(b, *fs).transpose(perm).reshape(b, n)
         return xr, xi
+    if p.kind == "bluestein":
+        return _bluestein_xla_pass(xr, xi, p, inverse)
     pencils, stride, f = p.view_in if p.view_in else (1, 1, p.n)
     luts = ops._transform_luts(p, inverse)
     if pencils == 1:
@@ -299,6 +338,10 @@ def _xla_pass(xr, xi, p: plan_lib.Pass, fs, inverse) -> Planes:
 def _gpu_pass(xr, xi, p: plan_lib.Pass, inverse, interpret, batch_tiles) -> Planes:
     """One claimed row-leaf pass through the Triton-shaped kernels."""
     b, n = xr.shape
+    if p.kind == "bluestein":
+        return ops._bluestein_pass(
+            xr, xi, p, inverse, interpret, _tile_for_gpu(p, batch_tiles), gpu=True
+        )
     pencils, stride, f = p.view_in if p.view_in else (1, 1, p.n)
     if pencils == 1:
         return _leaf_kernel_gpu(
@@ -338,10 +381,12 @@ def execute_program_gpu(
         interpret = ops.should_interpret()
     fs = [q.n for q in passes if q.kind != "reorder"]
     for p in passes:
+        # Passes may pin their own direction (the Bluestein inner conv).
+        eff = p.inverse if p.inverse is not None else inverse
         if claims(p):
-            xr, xi = _gpu_pass(xr, xi, p, inverse, interpret, batch_tiles)
+            xr, xi = _gpu_pass(xr, xi, p, eff, interpret, batch_tiles)
         else:
-            xr, xi = _xla_pass(xr, xi, p, fs, inverse)
+            xr, xi = _xla_pass(xr, xi, p, fs, eff)
     return xr, xi
 
 

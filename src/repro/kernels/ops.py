@@ -95,6 +95,72 @@ def _transform_luts(p: plan_lib.Pass, inverse: bool):
     return _fused_luts(p.n1, p.n2, inverse)
 
 
+def _bluestein_luts(p: plan_lib.Pass, inverse: bool):
+    """The LUT tuple of one Bluestein pass stage, host-cached piecewise.
+
+    The chirp planes and B̂ spectrum come from the interned
+    :mod:`repro.core.twiddle` caches (computed once per (n, pad,
+    direction), like every twiddle table); the fused ``fwd``/``inv``
+    stages additionally carry the pad-length transform's own LUTs.  The
+    INNER conv direction is fixed — forward then inverse — regardless of
+    ``inverse``, which only selects the chirp tables.
+    """
+    n, m_pad = p.n, p.n1
+    if p.stage == "pre":
+        ar, ai = tw.bluestein_chirp(n, inverse)
+        return (ar.reshape(1, n), ai.reshape(1, n))
+    if p.stage == "mul":
+        br, bi = tw.bluestein_spectrum(n, m_pad, inverse)
+        return (br.reshape(1, m_pad), bi.reshape(1, m_pad))
+    if p.stage == "post":
+        pr, pi = tw.bluestein_postchirp(n, inverse)
+        return (pr.reshape(1, n), pi.reshape(1, n))
+    inner = plan_lib._leaf_pass(m_pad)
+    if p.stage == "fwd":
+        ar, ai = tw.bluestein_chirp(n, inverse)
+        inner_luts = (
+            _direct_luts(m_pad, False)
+            if inner.kind == "direct"
+            else _fused_luts(inner.n1, inner.n2, False)
+        )
+        br, bi = tw.bluestein_spectrum(n, m_pad, inverse)
+        return (
+            ar.reshape(1, n), ai.reshape(1, n),
+            *inner_luts,
+            br.reshape(1, m_pad), bi.reshape(1, m_pad),
+        )
+    if p.stage != "inv":
+        raise ValueError(f"unknown bluestein stage {p.stage!r}")
+    inner_luts = (
+        _direct_luts(m_pad, True)
+        if inner.kind == "direct"
+        else _fused_luts(inner.n1, inner.n2, True)
+    )
+    pr, pi = tw.bluestein_postchirp(n, inverse)
+    return (*inner_luts, pr.reshape(1, n), pi.reshape(1, n))
+
+
+def _bluestein_pass(
+    xr, xi, p: plan_lib.Pass, inverse, interpret, bt, gpu: bool = False
+) -> Planes:
+    """One Bluestein program pass (any stage) as a single pallas_call."""
+    from repro.kernels import bluestein as bk
+
+    n, m_pad = p.n, p.n1
+    xr, xi, b, pad = _pad_batch(xr, xi, bt)
+    luts = _bluestein_luts(p, inverse)
+    kw = dict(n=n, m_pad=m_pad, batch_tile=bt, interpret=interpret, gpu=gpu)
+    if p.stage in ("fwd", "inv"):
+        inner = plan_lib._leaf_pass(m_pad)
+        call = bk.bluestein_fwd_call if p.stage == "fwd" else bk.bluestein_inv_call
+        yr, yi = call(
+            xr, xi, luts, inner_kind=inner.kind, in1=inner.n1, in2=inner.n2, **kw
+        )
+    else:
+        yr, yi = bk.bluestein_elem_call(xr, xi, luts, stage=p.stage, **kw)
+    return (yr, yi) if pad == 0 else (yr[:b], yi[:b])
+
+
 def _pad_batch(xr, xi, bt):
     b = xr.shape[0]
     pad = (-b) % bt
@@ -114,6 +180,8 @@ def _leaf_kernel(
     xr, xi, p: plan_lib.Pass, inverse, interpret, batch_tiles, natural_order=True
 ) -> Planes:
     """Single-pallas_call transform of the last axis (2-D input)."""
+    if p.kind == "bluestein":
+        return _bluestein_pass(xr, xi, p, inverse, interpret, _tile_for(p, batch_tiles))
     if p.n == 1:
         return xr, xi
     bt = _tile_for(p, batch_tiles)
@@ -148,6 +216,9 @@ def _apply_pass(
 ) -> Planes:
     """One row-axis program pass over (B, n) split planes.  ``chunk``
     overrides the VMEM-heuristic grid-step width (the tuner's hook)."""
+    # A pass may pin its own direction (the Bluestein inner conv is always
+    # forward-then-inverse regardless of the outer transform's direction).
+    inverse = p.inverse if p.inverse is not None else inverse
     b, n = xr.shape
     if p.kind == "reorder":
         # Digit-reversal relayout — only programs with ≥ 3 factors
@@ -337,9 +408,11 @@ def execute_program2d(
     """
     if interpret is None:
         interpret = should_interpret()
-    b, rows, n = xr.shape
     fs = [q.n for q in passes if q.kind != "reorder" and q.axis == -1]
     for i, p in enumerate(passes):
+        # Re-read per pass: a Bluestein row program changes the row width
+        # mid-program (n → pad → n).
+        b, rows, n = xr.shape
         chunk = chunks.get(i) if chunks else None
         if p.axis == -2:
             xr, xi = _cols_image_pass(xr, xi, p, inverse, interpret, chunk=chunk)
@@ -348,7 +421,8 @@ def execute_program2d(
             xr.reshape(b * rows, n), xi.reshape(b * rows, n),
             p, fs, inverse, interpret, batch_tiles, chunk=chunk,
         )
-        xr, xi = xr2.reshape(b, rows, n), xi2.reshape(b, rows, n)
+        w = xr2.shape[-1]
+        xr, xi = xr2.reshape(b, rows, w), xi2.reshape(b, rows, w)
     return xr, xi
 
 
@@ -467,10 +541,11 @@ def fft(
     inverse: bool = False,
     interpret: bool | None = None,
 ) -> Planes:
-    """Plan-deriving convenience: plans ``n`` and calls :func:`execute_plan`."""
+    """Plan-deriving convenience: plans ``n`` and calls :func:`execute_plan`.
+
+    Non-power-of-two lengths route through the planner's Bluestein leaf.
+    """
     n = xr.shape[-1]
-    if n & (n - 1):
-        raise ValueError(f"length must be a power of two, got {n}")
     return execute_plan(
         xr, xi, plan_lib.plan_fft(n), inverse=inverse, interpret=interpret
     )

@@ -192,10 +192,18 @@ def _fft_plan_info(fft_shape, model_n: int) -> dict:
             )
         }
 
+    def _bluestein_reports(lengths, batch: int) -> list:
+        # Non-pow2 leaves route through the Bluestein chirp-conv program;
+        # record its pad/flops overhead vs the hypothetical mixed-radix
+        # transform so the tax is observable in the artifact.
+        return [
+            rl.bluestein_report(m, batch=batch) for m in lengths if m & (m - 1)
+        ]
+
     if fft_shape.kind == "fft2d":
         # (batch, n1, n2) images: last axis n2 rows-first, columns n1.
         n_row, n_col = fft_shape.n2, fft_shape.n
-        return {
+        info = {
             "leaf_lengths": [n_col, n_row],
             "joint_schedule": plan_lib.describe(n_row, n2=n_col),
             "hbm_round_trips": plan_lib.plan_fft2(n_row, n_col).hbm_round_trips,
@@ -204,6 +212,10 @@ def _fft_plan_info(fft_shape, model_n: int) -> dict:
             ],
             "gpu_reports": [_gpu_report(n_row, fft_shape.batch * n_col)],
         }
+        blu = _bluestein_reports([n_row], fft_shape.batch * n_col)
+        if blu:
+            info["bluestein_reports"] = blu
+        return info
     # The tuned pencil schedule the driver will actually run: modeled-only
     # (`tuning.pencil_config`), so the dry-run host derives the same factors
     # / packing / chunk count as every SPMD host of the real mesh.
@@ -242,6 +254,11 @@ def _fft_plan_info(fft_shape, model_n: int) -> dict:
         info["conv_report"] = rl.conv_report(
             fft_shape.n, 4097, batch=fft_shape.batch
         )
+    blu = _bluestein_reports(
+        leaf_ns, fft_shape.batch * (total // max(leaf_ns))
+    )
+    if blu:
+        info["bluestein_reports"] = blu
     return info
 
 

@@ -53,8 +53,11 @@ def test_planned_carries_schedule_and_luts():
 
 
 def test_spec_validation():
+    F.FFTSpec(n=48)  # non-pow2 1-D lengths are valid (Bluestein route)
     with pytest.raises(ValueError):
-        F.FFTSpec(n=48)  # not a power of two
+        F.FFTSpec(n=0)  # n must be >= 1
+    with pytest.raises(ValueError):
+        F.FFTSpec(n=48, kind="rfft2", n2=64)  # 2-D row axis is still pow2
     with pytest.raises(ValueError):
         F.FFTSpec(n=64, kind="dct")
     with pytest.raises(ValueError):

@@ -42,9 +42,13 @@ def test_balanced_split():
     assert n2 <= 256 and n1 * n2 == 2**20
 
 
-def test_non_pow2_rejected():
+def test_non_pow2_routes_to_bluestein():
+    # Non-pow2 lengths compile to Bluestein chirp-conv leaves instead of
+    # being rejected; non-positive lengths still raise.
+    pl = P.plan_fft(48)
+    assert [p.kind for p in pl.passes] == ["bluestein", "bluestein"]
     with pytest.raises(ValueError):
-        P.plan_fft(48)
+        P.plan_fft(0)
     with pytest.raises(ValueError):
         P.balanced_split(0)
 
