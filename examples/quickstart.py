@@ -211,3 +211,31 @@ from repro.analysis import roofline as rl
 rep = rl.bluestein_report(2029)
 print("bluestein tax: pad %d (%.2fx), %.1fx flops vs mixed-radix"
       % (rep["pad"], rep["pad_ratio"], rep["flops_overhead"]))
+
+# ---- 16. fault tolerance: injection, per-leaf degradation, quarantine ------
+# Every claimed pallas leaf executes under a retry→quarantine→fallback
+# guard (`faults.run_leaf`): a leaf that fails twice is demoted to the
+# traced-XLA execution of the SAME pass, the (backend, pass-kind) pair is
+# quarantined for the process (warm re-plans skip the kernel entirely),
+# and the plan advertises the demotion.  Inject a deterministic kernel
+# fault — `inject_fault` in code, `REPRO_FAULTS=kernel.launch:64` from the
+# environment — and watch the transform survive it:
+from repro.core import faults
+
+with F.use_backend("pallas"):
+    pf = F.plan(F.FFTSpec(n=4096, batch_hint=2))
+xf = jax.random.normal(jax.random.PRNGKey(5), (2, 4096))
+with faults.inject_fault("kernel.launch", times=64):   # every attempt fails...
+    yf = pf(xf)                                        # ...the call still succeeds
+print("degraded leaf matches jnp.fft:",
+      bool(jnp.allclose(yf, jnp.fft.fft(xf), atol=1e-2)))
+print(pf.describe())                  # "...; DEGRADED: pass 0 fused4 (pallas→xla)"
+print("quarantined:", faults.quarantined())
+print("ledger:", faults.degradation_log())
+# Opt-in numerics guards ride on execution: check="nan" scans the output,
+# check="parseval" verifies energy conservation (NumericsError on drift).
+pf2 = F.plan(F.FFTSpec(n=4096, batch_hint=2))
+pf2(xf.astype(jnp.complex64), check="parseval")
+# Demo only: lift the quarantine so later cells keep using the kernels.
+faults.clear_quarantine()
+faults.clear_degradations()

@@ -16,6 +16,7 @@ Layers:
 from repro.core import (
     conv,
     distributed,
+    faults,
     fft,
     fft_xla,
     limits,
@@ -23,6 +24,16 @@ from repro.core import (
     plan,
     tuning,
     twiddle,
+)
+from repro.core.faults import (
+    CollectiveError,
+    KernelError,
+    NumericsError,
+    PlanError,
+    ReproError,
+    ServeError,
+    TuningCacheError,
+    inject_fault,
 )
 from repro.core.conv import fft_conv
 from repro.core.overlap import StreamingConv, fft_conv_os
@@ -48,6 +59,15 @@ from repro.core.plan import FFTPlan, plan_fft
 __all__ = [
     "conv",
     "distributed",
+    "faults",
+    "ReproError",
+    "PlanError",
+    "KernelError",
+    "TuningCacheError",
+    "CollectiveError",
+    "ServeError",
+    "NumericsError",
+    "inject_fault",
     "fft",
     "fft_xla",
     "limits",

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import faults
 from repro.core import fft as fft_lib
 from repro.core import plan as plan_lib
 from repro.core import twiddle as tw
@@ -104,7 +105,7 @@ def pencil_factors(n: int, d: int) -> tuple[int, int]:
         n1 *= 2
         n2 //= 2
     if n1 % d or n2 % d:
-        raise ValueError(f"cannot pencil-split n={n} over {d} devices")
+        raise faults.PlanError(f"cannot pencil-split n={n} over {d} devices")
     return n1, n2
 
 
@@ -121,6 +122,9 @@ def _local_twiddle(n1: int, n2: int, q: int, axis_name: str, inverse: bool):
 
 
 def _a2a(x, axis_name, split_axis, concat_axis):
+    faults.maybe_fail(
+        "pencil.all_to_all", axis_name=axis_name, split_axis=split_axis
+    )
     return jax.lax.all_to_all(
         x, axis_name, split_axis=split_axis, concat_axis=concat_axis, tiled=True
     )
@@ -159,9 +163,9 @@ class PencilPlan:
         self.backend = backend
         self.n1, self.n2 = int(config["n1"]), int(config["n2"])
         if self.n1 * self.n2 != n:
-            raise ValueError(f"pencil factors {self.n1}x{self.n2} != n={n}")
+            raise faults.PlanError(f"pencil factors {self.n1}x{self.n2} != n={n}")
         if d > 1 and (self.n1 % d or self.n2 % d):
-            raise ValueError(
+            raise faults.PlanError(
                 f"pencil factors {self.n1}x{self.n2} not divisible by d={d}"
             )
         self.p = self.n1 // max(d, 1)

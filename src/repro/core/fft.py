@@ -59,9 +59,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core import fft_xla
 from repro.core import plan as plan_lib
 from repro.core import twiddle as tw
+from repro.core.faults import NumericsError, PlanError
 
 Planes = Tuple[jax.Array, jax.Array]
 ArrayOrPlanes = Union[jax.Array, Planes]
@@ -92,6 +94,10 @@ __all__ = [
 KINDS = ("fft", "ifft", "rfft", "irfft", "fft2", "ifft2", "rfft2", "irfft2")
 _COMPLEX_KINDS = ("fft", "ifft")
 _2D_KINDS = ("fft2", "ifft2", "rfft2", "irfft2")
+
+#: Relative tolerance of the opt-in ``check="parseval"`` energy guard —
+#: generous for float32 accumulation; it flags corruption, not rounding.
+PARSEVAL_RTOL = 1e-2
 
 
 def _is_pow2(n: int) -> bool:
@@ -139,31 +145,31 @@ class FFTSpec:
 
     def __post_init__(self):
         if self.kind not in KINDS:
-            raise ValueError(f"unknown FFT kind {self.kind!r}; one of {KINDS}")
+            raise PlanError(f"unknown FFT kind {self.kind!r}; one of {KINDS}")
         if self.n < 1:
-            raise ValueError(f"FFT length must be >= 1, got {self.n}")
+            raise PlanError(f"FFT length must be >= 1, got {self.n}")
         if self.kind in ("rfft2", "irfft2") and not _is_pow2(self.n):
-            raise ValueError(
+            raise PlanError(
                 f"{self.kind} requires a power-of-two row length, got n={self.n}; "
                 f"non-power-of-two lengths are supported for "
                 f"{_COMPLEX_KINDS + ('rfft', 'irfft', 'fft2', 'ifft2')} via the "
                 f"Bluestein chirp-conv route"
             )
         if self.kind in ("rfft", "irfft", "rfft2", "irfft2") and self.n < 2:
-            raise ValueError(f"{self.kind} length must be >= 2, got {self.n}")
+            raise PlanError(f"{self.kind} length must be >= 2, got {self.n}")
         if self.kind in _2D_KINDS:
             if self.n2 is None or not _is_pow2(self.n2):
-                raise ValueError(
+                raise PlanError(
                     f"{self.kind} needs a power-of-two n2 (column length), got "
                     f"{self.n2}; only the last (row) axis takes non-power-of-two "
                     f"lengths (Bluestein route)"
                 )
             if self.axis != -1:
-                raise ValueError(f"{self.kind} always transforms the last two axes")
+                raise PlanError(f"{self.kind} always transforms the last two axes")
         elif self.n2 is not None:
-            raise ValueError(f"n2 is only meaningful for the 2-D kinds {_2D_KINDS}")
+            raise PlanError(f"n2 is only meaningful for the 2-D kinds {_2D_KINDS}")
         if self.batch_hint is not None and self.batch_hint < 1:
-            raise ValueError(f"batch_hint must be >= 1, got {self.batch_hint}")
+            raise PlanError(f"batch_hint must be >= 1, got {self.batch_hint}")
 
 
 # ---------------------------------------------------------------------------
@@ -273,7 +279,7 @@ def register_backend(
     silently shadow a built-in.
     """
     if not overwrite and name in _REGISTRY:
-        raise ValueError(f"FFT backend {name!r} is already registered")
+        raise PlanError(f"FFT backend {name!r} is already registered")
     entry = Backend(
         name,
         fn,
@@ -298,7 +304,7 @@ def get_backend(name: str) -> Backend:
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise ValueError(
+        raise PlanError(
             f"unknown FFT backend {name!r}; registered: {available_backends()}"
         ) from None
 
@@ -316,7 +322,7 @@ def _negotiate(spec: FFTSpec, platform: str) -> Backend:
         if best is None or key > (best.capabilities.score(platform), best.seq):
             best = entry
     if best is None:
-        raise ValueError(
+        raise PlanError(
             f"no registered FFT backend supports {spec} on platform {platform!r}"
         )
     return best
@@ -558,6 +564,11 @@ class PlannedFFT:
             if tuned
             else {}
         )
+        #: Leaf demotions recorded at execution time (kernel failed twice →
+        #: quarantined → traced-XLA fallback) — see :mod:`repro.core.faults`.
+        #: Empty on the happy path; appended to by the executors through the
+        #: ``degradations`` thread, deduplicated per (backend, kind, pass).
+        self._degradations: list = []
 
     # -- identity ----------------------------------------------------------
 
@@ -581,6 +592,20 @@ class PlannedFFT:
         """leaf length → chosen kernel batch tile (read-only: the handle is
         interned and shared process-wide)."""
         return types.MappingProxyType(self._batch_tiles)
+
+    @property
+    def degradations(self) -> tuple:
+        """Leaf demotions this plan has taken (snapshot, execution-recorded).
+
+        Each entry is ``{"backend", "kind", "pass", "reason"}``: a claimed
+        pallas leaf that failed twice, was quarantined, and now executes
+        through the traced-XLA fallback.  Includes the children's ledgers
+        for the real-packing / composed kinds.
+        """
+        recs = list(self._degradations)
+        for c in self.children:
+            recs.extend(c.degradations)
+        return tuple(recs)
 
     @property
     def hbm_round_trips(self) -> int:
@@ -635,13 +660,19 @@ class PlannedFFT:
                 + self._describe_tuned()
                 + self._describe_bluestein()
                 + self._describe_gpu()
+                + self._describe_degraded()
             )
         parts = [plan_lib.describe_program(c.fft_plan) for c in self.children
                  if c.fft_plan is not None]
         s = head + " | ".join(parts)
         if self.epilogue is not None:
             s += f"; epilogue pass: {self.epilogue.kind} n={self.epilogue.n}"
-        return s + self._describe_bluestein() + self._describe_gpu()
+        return (
+            s
+            + self._describe_bluestein()
+            + self._describe_gpu()
+            + self._describe_degraded()
+        )
 
     def _describe_bluestein(self) -> str:
         """Chirp-conv pad and modeled overhead vs a hypothetical mixed-radix
@@ -674,6 +705,17 @@ class PlannedFFT:
             f"(budget {rep['smem_budget'] / 1024:.0f} KiB), "
             f"claims [{', '.join(rep['claims'])}]"
         )
+
+    def _describe_degraded(self) -> str:
+        """Leaf demotions, appended so a degraded schedule is visible next
+        to the plan that took it (empty on the happy path)."""
+        recs = self.degradations
+        if not recs:
+            return ""
+        parts = [
+            f"pass {r['pass']} {r['kind']} ({r['backend']}→xla)" for r in recs
+        ]
+        return "; DEGRADED: " + ", ".join(parts)
 
     def _describe_tuned(self) -> str:
         """The tuned choices per pass, appended to :meth:`describe` so the
@@ -735,31 +777,98 @@ class PlannedFFT:
         if kind in _COMPLEX_KINDS:
             yr, yi = self._complex(xr, xi, inverse=kind == "ifft")
         else:
-            raise ValueError(f"apply_planes on {kind!r} plan; use __call__")
+            raise PlanError(f"apply_planes on {kind!r} plan; use __call__")
         if move:
             yr, yi = self._from_last(yr), self._from_last(yi)
         return yr, yi
 
-    def __call__(self, x: ArrayOrPlanes) -> ArrayOrPlanes:
+    def __call__(
+        self, x: ArrayOrPlanes, check: Optional[str] = None
+    ) -> ArrayOrPlanes:
+        """Execute the planned transform.
+
+        ``check`` arms an opt-in numerics guard over the result (host-side,
+        eager-only): ``"nan"`` raises :class:`~repro.core.faults.NumericsError`
+        on non-finite output values; ``"parseval"`` checks energy
+        conservation (complex kinds) at :data:`PARSEVAL_RTOL` — a cheap
+        structured detector for silent corruption on degraded or unfamiliar
+        hardware paths.
+        """
         kind = self.spec.kind
         if kind in _COMPLEX_KINDS or kind in ("fft2", "ifft2"):
             xr, xi, was_c = _split(x)
             yr, yi = self.apply_planes(xr, xi)
-            return _join(yr, yi, was_c)
-        if kind == "rfft":
-            return self._rfft(x)
-        if kind == "irfft":
-            return self._irfft(x)
-        if kind == "rfft2":
-            return self._rfft2(x)
-        return self._irfft2(x)
+            out = _join(yr, yi, was_c)
+        elif kind == "rfft":
+            out = self._rfft(x)
+        elif kind == "irfft":
+            out = self._irfft(x)
+        elif kind == "rfft2":
+            out = self._rfft2(x)
+        else:
+            out = self._irfft2(x)
+        if check is not None:
+            self._run_check(x, out, check)
+        return out
+
+    def _run_check(self, x, out, check: str) -> None:
+        """The opt-in numerics guards behind ``__call__(x, check=...)``."""
+        if check not in ("nan", "parseval"):
+            raise PlanError(
+                f"unknown numerics check {check!r}; expected 'nan' or 'parseval'",
+                spec=self.spec,
+                backend=self.backend.name,
+            )
+        ins = list(x) if isinstance(x, (tuple, list)) else [x]
+        outs = list(out) if isinstance(out, (tuple, list)) else [out]
+        if any(isinstance(a, jax.core.Tracer) for a in ins + outs):
+            raise PlanError(
+                "numerics checks are host-side guards; call the plan with "
+                "check= outside jit",
+                spec=self.spec,
+                backend=self.backend.name,
+            )
+        if check == "nan":
+            if not all(bool(jnp.all(jnp.isfinite(a))) for a in outs):
+                raise NumericsError(
+                    "non-finite values in planned FFT output",
+                    spec=self.spec,
+                    backend=self.backend.name,
+                    check="nan",
+                )
+            return
+        kind = self.spec.kind
+        if kind not in ("fft", "ifft", "fft2", "ifft2"):
+            raise PlanError(
+                f'check="parseval" covers the complex kinds, not {kind!r}',
+                spec=self.spec,
+                backend=self.backend.name,
+            )
+
+        def energy(arrays) -> float:
+            # Split planes sum to the same |z|² as the packed complex array.
+            return float(
+                sum(np.sum(np.abs(np.asarray(a, np.complex128)) ** 2) for a in arrays)
+            )
+
+        e_in, e_out = energy(ins), energy(outs)
+        scale = self.spec.n * (self.spec.n2 or 1)
+        expected = e_in * scale if kind in ("fft", "fft2") else e_in / scale
+        if not np.isclose(e_out, expected, rtol=PARSEVAL_RTOL, atol=1e-30):
+            raise NumericsError(
+                f"Parseval energy mismatch: output {e_out:.6g}, expected "
+                f"{expected:.6g} (rtol {PARSEVAL_RTOL})",
+                spec=self.spec,
+                backend=self.backend.name,
+                check="parseval",
+            )
 
     # -- 2-D execution: ONE joint program, no transposes between the axes ---
 
     def _check_image(self, xr):
         n, n2 = self.spec.n, self.spec.n2
         if xr.ndim < 2 or xr.shape[-2:] != (n2, n):
-            raise ValueError(
+            raise PlanError(
                 f"{self.spec.kind} planned for (..., {n2}, {n}) images, "
                 f"got shape {tuple(xr.shape)}"
             )
@@ -805,7 +914,7 @@ class PlannedFFT:
         halves around its all-to-all transposes: row passes on the
         row-sharded slab, column passes on the column slab."""
         if self.spec.kind not in ("fft2", "ifft2"):
-            raise ValueError(f"apply_rows needs a 2-D complex plan, not {self.spec.kind!r}")
+            raise PlanError(f"apply_rows needs a 2-D complex plan, not {self.spec.kind!r}")
         inverse = self.spec.kind == "ifft2"
         if self.fft_plan is None or not self.backend.capabilities.native_2d:
             return self._row_col_plans()[0].apply_planes(xr, xi)
@@ -822,6 +931,7 @@ class PlannedFFT:
             inverse=inverse,
             batch_tiles=self._batch_tiles,
             chunks=self._half_chunks(row_idx),
+            degradations=self._degradations,
         )
         return yr.reshape(*lead, n), yi.reshape(*lead, n)
 
@@ -839,7 +949,7 @@ class PlannedFFT:
         """Run only the column (axis -2) sub-program of a 2-D plan, in place
         over whatever width the slab carries (see :meth:`apply_rows`)."""
         if self.spec.kind not in ("fft2", "ifft2"):
-            raise ValueError(f"apply_cols needs a 2-D complex plan, not {self.spec.kind!r}")
+            raise PlanError(f"apply_cols needs a 2-D complex plan, not {self.spec.kind!r}")
         inverse = self.spec.kind == "ifft2"
         if self.fft_plan is None or not self.backend.capabilities.native_2d:
             return self._row_col_plans()[1].apply_planes(xr, xi)
@@ -851,7 +961,7 @@ class PlannedFFT:
             return xr, xi
         lead, (rows, w) = xr.shape[:-2], xr.shape[-2:]
         if rows != self.spec.n2:
-            raise ValueError(f"plan is for n2={self.spec.n2} columns, got {rows}")
+            raise PlanError(f"plan is for n2={self.spec.n2} columns, got {rows}")
         b = int(np.prod(lead)) if lead else 1
         yr, yi = kernel_ops.execute_program2d(
             xr.reshape(b, rows, w),
@@ -860,6 +970,7 @@ class PlannedFFT:
             inverse=inverse,
             batch_tiles=self._batch_tiles,
             chunks=self._half_chunks(col_idx),
+            degradations=self._degradations,
         )
         return yr.reshape(*lead, rows, w), yi.reshape(*lead, rows, w)
 
@@ -876,16 +987,28 @@ class PlannedFFT:
         wr_np, wi_np = self.luts[0]
         m = Zr.shape[-1]
         if self._recomb_kernel():
-            from repro.kernels import ops as kernel_ops
-            from repro.kernels import pencil as pencil_kernels
 
-            lead = Zr.shape[:-1]
-            b = int(np.prod(lead)) if lead else 1
-            Xr, Xi = pencil_kernels.rfft_recomb_call(
-                Zr.reshape(b, m), Zi.reshape(b, m), wr_np, wi_np,
-                interpret=kernel_ops.should_interpret(),
+            def kernel() -> Planes:
+                from repro.kernels import ops as kernel_ops
+                from repro.kernels import pencil as pencil_kernels
+
+                lead = Zr.shape[:-1]
+                b = int(np.prod(lead)) if lead else 1
+                Xr, Xi = pencil_kernels.rfft_recomb_call(
+                    Zr.reshape(b, m), Zi.reshape(b, m), wr_np, wi_np,
+                    interpret=kernel_ops.should_interpret(),
+                )
+                return Xr.reshape(*lead, m + 1), Xi.reshape(*lead, m + 1)
+
+            return faults.run_leaf(
+                self.backend.name,
+                self.epilogue.kind,
+                kernel,
+                lambda: fft_xla.rfft_recomb(
+                    Zr, Zi, jnp.asarray(wr_np), jnp.asarray(wi_np)
+                ),
+                degradations=self._degradations,
             )
-            return Xr.reshape(*lead, m + 1), Xi.reshape(*lead, m + 1)
         wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
         return fft_xla.rfft_recomb(Zr, Zi, wr, wi)
 
@@ -895,16 +1018,28 @@ class PlannedFFT:
         wr_np, wi_np = self.luts[0]  # e^{+2πik/n}
         m = Xr.shape[-1] - 1
         if self._recomb_kernel():
-            from repro.kernels import ops as kernel_ops
-            from repro.kernels import pencil as pencil_kernels
 
-            lead = Xr.shape[:-1]
-            b = int(np.prod(lead)) if lead else 1
-            Zr, Zi = pencil_kernels.irfft_recomb_call(
-                Xr.reshape(b, m + 1), Xi.reshape(b, m + 1), wr_np, wi_np,
-                interpret=kernel_ops.should_interpret(),
+            def kernel() -> Planes:
+                from repro.kernels import ops as kernel_ops
+                from repro.kernels import pencil as pencil_kernels
+
+                lead = Xr.shape[:-1]
+                b = int(np.prod(lead)) if lead else 1
+                Zr, Zi = pencil_kernels.irfft_recomb_call(
+                    Xr.reshape(b, m + 1), Xi.reshape(b, m + 1), wr_np, wi_np,
+                    interpret=kernel_ops.should_interpret(),
+                )
+                return Zr.reshape(*lead, m), Zi.reshape(*lead, m)
+
+            return faults.run_leaf(
+                self.backend.name,
+                self.epilogue.kind,
+                kernel,
+                lambda: fft_xla.irfft_recomb(
+                    Xr, Xi, jnp.asarray(wr_np), jnp.asarray(wi_np)
+                ),
+                degradations=self._degradations,
             )
-            return Zr.reshape(*lead, m), Zi.reshape(*lead, m)
         wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
         return fft_xla.irfft_recomb(Xr, Xi, wr, wi)
 
@@ -926,7 +1061,7 @@ class PlannedFFT:
         if move:
             x = self._to_last(x)
         if x.shape[-1] != n:
-            raise ValueError(f"rfft planned for n={n}, got axis length {x.shape[-1]}")
+            raise PlanError(f"rfft planned for n={n}, got axis length {x.shape[-1]}")
         (inner,) = self.children
         if n % 2:
             # Odd length: full complex transform (Bluestein leaf), sliced to
@@ -955,7 +1090,7 @@ class PlannedFFT:
             Xr, Xi = self._to_last(Xr), self._to_last(Xi)
         m = n // 2
         if Xr.shape[-1] != m + 1:
-            raise ValueError(f"irfft expects n//2+1={m + 1} bins, got {Xr.shape[-1]}")
+            raise PlanError(f"irfft expects n//2+1={m + 1} bins, got {Xr.shape[-1]}")
         (inner,) = self.children
         if n % 2:
             # Odd length: Hermitian-extend the bins to the full spectrum,
@@ -994,7 +1129,7 @@ class PlannedFFT:
         Xr, Xi = x
         m = n // 2
         if Xr.ndim < 2 or Xr.shape[-2:] != (n2, m + 1):
-            raise ValueError(
+            raise PlanError(
                 f"irfft2 expects (..., {n2}, {m + 1}) bins, got {tuple(Xr.shape)}"
             )
         inner, cols = self.children
@@ -1090,7 +1225,7 @@ def _build_plan(
     else:
         entry = get_backend(backend_name)
         if not entry.capabilities.supports(spec, platform):
-            raise ValueError(
+            raise PlanError(
                 f"backend {entry.name!r} does not support {spec} on {platform!r}"
             )
 
@@ -1245,6 +1380,7 @@ def _pallas_backend(xr, xi, *, inverse, planned, axis=-1):
         batch_tiles=planned.batch_tiles,
         axis=axis,
         chunks=planned.pass_chunks or None,
+        degradations=planned._degradations,
     )
 
 
@@ -1261,6 +1397,7 @@ def _pallas_gpu_backend(xr, xi, *, inverse, planned, axis=-1):
         planned.fft_plan,
         inverse=inverse,
         batch_tiles=planned.batch_tiles,
+        degradations=planned._degradations,
     )
 
 

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core import fft as fft_lib
 from repro.core import plan as plan_lib
 from repro.core.fft_xla import cmul
@@ -78,13 +79,13 @@ def pick_block(filter_len: int, block: Optional[int] = None) -> int:
     least one valid sample).
     """
     if filter_len < 1:
-        raise ValueError(f"filter must have at least one tap, got {filter_len}")
+        raise faults.PlanError(f"filter must have at least one tap, got {filter_len}")
     p = next_pow2(filter_len)
     if block is not None:
         if block <= 0 or block & (block - 1):
-            raise ValueError(f"block must be a power of two, got {block}")
+            raise faults.PlanError(f"block must be a power of two, got {block}")
         if block <= filter_len - 1:
-            raise ValueError(
+            raise faults.PlanError(
                 f"block={block} leaves no valid samples for a "
                 f"{filter_len}-tap filter (needs block > {filter_len - 1})"
             )
@@ -133,7 +134,7 @@ def frame_signal(
     overlap = block - step
     pad_r = num_blocks * step - x.shape[-1]
     if pad_r < 0:
-        raise ValueError(
+        raise faults.PlanError(
             f"{num_blocks} blocks of step {step} cover only "
             f"{num_blocks * step} < {x.shape[-1]} samples"
         )
@@ -376,7 +377,7 @@ class StreamingConv:
         x = jnp.asarray(x)
         out_dtype = x.dtype
         if state.shape[-1] != self.overlap:
-            raise ValueError(
+            raise faults.PlanError(
                 f"state carries {state.shape[-1]} samples, filter needs "
                 f"{self.overlap}"
             )
@@ -406,7 +407,7 @@ class StreamingConv:
         stream would emit if the next ``window`` samples were zero.  The
         decode-grain flush primitive; see :func:`stream_lookahead`."""
         if state.shape[-1] != self.overlap:
-            raise ValueError(
+            raise faults.PlanError(
                 f"state carries {state.shape[-1]} samples, filter needs "
                 f"{self.overlap}"
             )

@@ -44,6 +44,7 @@ import dataclasses
 import functools
 import math
 
+from repro.core import faults
 from repro.core.limits import (
     DIRECT_MAX,
     FUSED_MAX,
@@ -91,7 +92,7 @@ def balanced_split(n: int, cap: int | None = None) -> tuple[int, int]:
     the inner factor always lands in the fused-kernel regime).
     """
     if not _is_pow2(n):
-        raise ValueError(f"FFT length must be a power of two, got {n}")
+        raise faults.PlanError(f"FFT length must be a power of two, got {n}")
     lg = n.bit_length() - 1
     lg1 = (lg + 1) // 2
     n1, n2 = 1 << lg1, 1 << (lg - lg1)
@@ -227,7 +228,7 @@ def program_factors(n: int, fused_max: int = FUSED_MAX) -> tuple[int, ...]:
     always agree on the factorisation policy.
     """
     if not _is_pow2(n):
-        raise ValueError(f"FFT length must be a power of two, got {n}")
+        raise faults.PlanError(f"FFT length must be a power of two, got {n}")
     fs: list[int] = []
     m = n
     while m > fused_max:
@@ -257,7 +258,7 @@ def compile_passes(
     pass, and ``order='pencil'`` skips it for fft→pointwise→ifft pipelines.
     """
     if order not in ("natural", "pencil"):
-        raise ValueError(f"order must be 'natural' or 'pencil', got {order!r}")
+        raise faults.PlanError(f"order must be 'natural' or 'pencil', got {order!r}")
     if not _is_pow2(n):
         # Non-pow2 lengths compile to the Bluestein chirp-conv program —
         # natural-order by construction (the post-chirp slice IS the
@@ -329,12 +330,12 @@ def compile_bluestein(
       LUTs, never the conv).
     """
     if _is_pow2(n):
-        raise ValueError(f"n={n} is a power of two; use compile_passes")
+        raise faults.PlanError(f"n={n} is a power of two; use compile_passes")
     if n < 2:
-        raise ValueError(f"Bluestein lengths start at 2, got {n}")
+        raise faults.PlanError(f"Bluestein lengths start at 2, got {n}")
     m_pad = bluestein_pad(n) if pad is None else pad
     if not _is_pow2(m_pad) or m_pad < 2 * n - 1:
-        raise ValueError(
+        raise faults.PlanError(
             f"bluestein pad must be a power of two ≥ 2n-1 = {2 * n - 1}, "
             f"got {m_pad}"
         )
@@ -413,7 +414,7 @@ def compile_passes2d(
     gated.
     """
     if not _is_pow2(n2):
-        raise ValueError(f"FFT length must be a power of two, got {n2}")
+        raise faults.PlanError(f"FFT length must be a power of two, got {n2}")
     passes = list(compile_passes(n, fused_max, "natural", direct_max))
     if n2 <= fused_max:
         if n2 > 1:
@@ -458,7 +459,7 @@ def plan_fft(
     conv pad length (the tuner's knob — pow2, ≥ 2n−1).
     """
     if n < 1:
-        raise ValueError(f"FFT length must be positive, got {n}")
+        raise faults.PlanError(f"FFT length must be positive, got {n}")
     if not _is_pow2(n):
         passes = compile_bluestein(n, pad, fused_max, direct_max)
         m_pad = passes[0].n1
@@ -474,7 +475,7 @@ def plan_fft(
             passes=passes,
         )
     if pad is not None:
-        raise ValueError("pad applies only to non-power-of-two lengths")
+        raise faults.PlanError("pad applies only to non-power-of-two lengths")
     levels: list[tuple[int, int]] = []
     m = n
     while m > fused_max:

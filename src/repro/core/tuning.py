@@ -43,10 +43,14 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 from typing import Callable, Optional
+
+from repro.core import faults
 
 __all__ = [
     "TUNE_MODES",
+    "CACHE_SCHEMA_VERSION",
     "resolve_mode",
     "TuningSpace",
     "TuningCache",
@@ -64,6 +68,10 @@ __all__ = [
 ]
 
 TUNE_MODES = ("off", "model", "measure")
+
+#: On-disk cache file schema.  Bump when the file layout changes; a file
+#: with any other version is quarantined as foreign rather than guessed at.
+CACHE_SCHEMA_VERSION = 1
 
 #: Modeled-bytes tolerance of the roofline pruning: candidates more than
 #: 20% above the modeled-minimum HBM traffic are never worth measuring.
@@ -90,7 +98,7 @@ def resolve_mode(tune: Optional[str]) -> str:
     if tune is None:
         tune = os.environ.get("REPRO_FFT_TUNE") or "model"
     if tune not in TUNE_MODES:
-        raise ValueError(f"tune must be one of {TUNE_MODES}, got {tune!r}")
+        raise faults.PlanError(f"tune must be one of {TUNE_MODES}, got {tune!r}")
     return tune
 
 
@@ -150,31 +158,86 @@ def device_key() -> str:
 
 
 class TuningCache:
-    """The persistent winner store: a flat JSON object mapping
-    ``device|backend|decision|spec`` keys to ``{"config": ..., "mode": ...}``.
+    """The persistent winner store: a versioned JSON file
+    (``{"version": CACHE_SCHEMA_VERSION, "entries": {...}}``) whose entries
+    map ``device|backend|decision|spec`` keys to
+    ``{"config": ..., "mode": ...}``.
 
     Reads are lazy and memoized per path.  Writes re-read the file, merge,
     and replace it atomically (temp file + ``os.replace``), so concurrent
     processes sharing one cache append winners instead of clobbering each
     other's, and a reader can never observe a half-written file.  An
     unwritable cache directory degrades to memory-only rather than failing
-    the transform."""
+    the transform.
+
+    Robustness: a corrupted, truncated, or foreign-schema cache file is
+    quarantined to a ``.corrupt`` sibling with a warning and the cache
+    rebuilds from the packaged seed (:func:`seed_cache` layers beneath
+    every :meth:`get`) — seeded specs keep planning with zero measurements.
+    Pre-versioning flat files are still readable and upgrade to the
+    versioned schema on the next write.  The ``tuning.cache_read`` /
+    ``tuning.cache_write`` fault sites cover both paths."""
 
     def __init__(self):
         self._mem: dict = {}
         self._loaded_path: Optional[str] = None
 
     @staticmethod
-    def _read_file(path: str) -> dict:
-        if os.path.exists(path):
-            try:
-                with open(path) as f:
-                    data = json.load(f)
-                if isinstance(data, dict):
-                    return data
-            except (json.JSONDecodeError, OSError):
-                pass
+    def _quarantine_corrupt(path: str, reason: str) -> None:
+        corrupt = path + ".corrupt"
+        try:
+            os.replace(path, corrupt)
+            moved = f"quarantined to {corrupt}"
+        except OSError:
+            moved = "could not quarantine the file"
+        warnings.warn(
+            f"tuning cache {path} is unusable ({reason}); {moved}; "
+            f"rebuilding from the packaged seed",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+    @staticmethod
+    def _validate_schema(data, path: str) -> dict:
+        """Entries of a loaded cache document, or {} after quarantining a
+        foreign-schema file."""
+        if (
+            isinstance(data, dict)
+            and data.get("version") == CACHE_SCHEMA_VERSION
+            and isinstance(data.get("entries"), dict)
+        ):
+            return data["entries"]
+        if (
+            isinstance(data, dict)
+            and "version" not in data
+            and all(
+                isinstance(v, dict) and "config" in v for v in data.values()
+            )
+        ):
+            # Pre-versioning flat schema: readable as-is, upgraded on the
+            # next put().
+            return data
+        TuningCache._quarantine_corrupt(
+            path, f"foreign schema (version {data.get('version') if isinstance(data, dict) else type(data).__name__!r})"
+        )
         return {}
+
+    @staticmethod
+    def _read_file(path: str) -> dict:
+        if not os.path.exists(path):
+            return {}
+        try:
+            faults.maybe_fail("tuning.cache_read", path=path)
+            with open(path) as f:
+                data = json.load(f)
+        except faults.TuningCacheError:
+            # Injected read fault: behave like an unreadable file — memory +
+            # seed keep serving, nothing is quarantined (the file is fine).
+            return {}
+        except (json.JSONDecodeError, OSError) as err:
+            TuningCache._quarantine_corrupt(path, f"{type(err).__name__}: {err}")
+            return {}
+        return TuningCache._validate_schema(data, path)
 
     def _load(self) -> dict:
         path = cache_path()
@@ -197,16 +260,18 @@ class TuningCache:
         mem[key] = entry
         path = cache_path()
         try:
+            faults.maybe_fail("tuning.cache_write", path=path)
             os.makedirs(os.path.dirname(path), exist_ok=True)
             # Merge-on-write: another process may have persisted winners
             # since our load; union them (our new entry wins its own key).
             merged = {**self._read_file(path), **mem}
+            doc = {"version": CACHE_SCHEMA_VERSION, "entries": merged}
             tmp = f"{path}.tmp.{os.getpid()}"
             with open(tmp, "w") as f:
-                json.dump(merged, f, indent=1, sort_keys=True)
+                json.dump(doc, f, indent=1, sort_keys=True)
             os.replace(tmp, path)
             self._mem = merged
-        except OSError:
+        except (OSError, faults.TuningCacheError):
             pass  # memory-only fallback
 
     def clear(self) -> None:

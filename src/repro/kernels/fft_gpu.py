@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import faults
 from repro.core import plan as plan_lib
 from repro.core.fft_xla import cmul
 from repro.kernels import ops, pencil
@@ -373,18 +374,33 @@ def execute_program_gpu(
     interpret: bool | None = None,
     batch_tiles: Mapping[int, int] | None = None,
     claims: Callable[[plan_lib.Pass], bool] = gpu_claims,
+    degradations: list | None = None,
 ) -> Planes:
     """Walk a linearized pass program over (B, n) split planes, executing
     claimed passes through the Triton-shaped kernels and the rest through
-    the traced-XLA fallback — per-leaf negotiation, one buffer."""
+    the traced-XLA fallback — per-leaf negotiation, one buffer.
+
+    Claimed leaves run under :func:`repro.core.faults.run_leaf`: a leaf
+    that fails to trace/compile is retried once, then (pallas_gpu, kind)
+    is quarantined and the leaf demotes to the same traced-XLA fallback
+    unclaimed passes use, recorded on ``degradations``."""
     if interpret is None:
         interpret = ops.should_interpret()
     fs = [q.n for q in passes if q.kind != "reorder"]
-    for p in passes:
+    for i, p in enumerate(passes):
         # Passes may pin their own direction (the Bluestein inner conv).
         eff = p.inverse if p.inverse is not None else inverse
         if claims(p):
-            xr, xi = _gpu_pass(xr, xi, p, eff, interpret, batch_tiles)
+            xr, xi = faults.run_leaf(
+                "pallas_gpu",
+                p.kind,
+                lambda xr=xr, xi=xi, p=p, eff=eff: _gpu_pass(
+                    xr, xi, p, eff, interpret, batch_tiles
+                ),
+                lambda xr=xr, xi=xi, p=p, eff=eff: _xla_pass(xr, xi, p, fs, eff),
+                degradations=degradations,
+                index=i,
+            )
         else:
             xr, xi = _xla_pass(xr, xi, p, fs, eff)
     return xr, xi
@@ -399,12 +415,13 @@ def execute_plan_gpu(
     interpret: bool | None = None,
     batch_tiles: Mapping[int, int] | None = None,
     order: str = "natural",
+    degradations: list | None = None,
 ) -> Planes:
     """Execute a 1-D :class:`~repro.core.plan.FFTPlan` over the last axis
     with the GPU claim surface (any leading batch dims)."""
     n = xr.shape[-1]
     if n != fft_plan.n:
-        raise ValueError(f"plan is for n={fft_plan.n}, input has n={n}")
+        raise faults.PlanError(f"plan is for n={fft_plan.n}, input has n={n}")
     passes = (
         fft_plan.passes
         if order == "natural"
@@ -415,5 +432,6 @@ def execute_plan_gpu(
     yr, yi = execute_program_gpu(
         xr.reshape(b, n), xi.reshape(b, n), passes,
         inverse=inverse, interpret=interpret, batch_tiles=batch_tiles,
+        degradations=degradations,
     )
     return yr.reshape(*lead, n), yi.reshape(*lead, n)

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core import plan as plan_lib
 from repro.core import twiddle as tw
 from repro.kernels.dft_matmul import dft_matmul_call
@@ -212,10 +213,16 @@ def _leaf_kernel(
 
 
 def _apply_pass(
-    xr, xi, p: plan_lib.Pass, fs, inverse, interpret, batch_tiles, chunk=None
+    xr, xi, p: plan_lib.Pass, fs, inverse, interpret, batch_tiles, chunk=None,
+    degradations=None, index=None,
 ) -> Planes:
     """One row-axis program pass over (B, n) split planes.  ``chunk``
-    overrides the VMEM-heuristic grid-step width (the tuner's hook)."""
+    overrides the VMEM-heuristic grid-step width (the tuner's hook).
+
+    Kernel passes run under :func:`repro.core.faults.run_leaf`: a leaf
+    that fails to trace/compile is retried once, then the (pallas, kind)
+    pair is quarantined and the pass demotes to the traced-XLA fallback,
+    recorded on ``degradations``.  The no-fault jaxpr is untouched."""
     # A pass may pin its own direction (the Bluestein inner conv is always
     # forward-then-inverse regardless of the outer transform's direction).
     inverse = p.inverse if p.inverse is not None else inverse
@@ -227,6 +234,34 @@ def _apply_pass(
         xr = xr.reshape(b, *fs).transpose(perm).reshape(b, n)
         xi = xi.reshape(b, *fs).transpose(perm).reshape(b, n)
         return xr, xi
+    return faults.run_leaf(
+        "pallas",
+        p.kind,
+        lambda: _pass_kernel(xr, xi, p, inverse, interpret, batch_tiles, chunk),
+        lambda: _row_pass_xla(xr, xi, p, inverse),
+        degradations=degradations,
+        index=index,
+    )
+
+
+def _row_pass_xla(xr, xi, p: plan_lib.Pass, inverse) -> Planes:
+    """Traced-XLA execution of one row pass — the degradation target.
+
+    Reuses the GPU backend's generic per-pass fallback (same LUT tables,
+    same scaling convention), imported lazily: ``fft_gpu`` imports this
+    module at load time.
+    """
+    from repro.kernels import fft_gpu
+
+    return fft_gpu._xla_pass(xr, xi, p, [], inverse)
+
+
+def _pass_kernel(
+    xr, xi, p: plan_lib.Pass, inverse, interpret, batch_tiles, chunk
+) -> Planes:
+    """The pallas execution of one non-reorder row pass (direction already
+    resolved by :func:`_apply_pass`)."""
+    b, n = xr.shape
     pencils, stride, f = p.view_in
     if pencils == 1:
         # Whole-signal pass: the ≤ FUSED_MAX one-call regime.
@@ -288,7 +323,50 @@ def _fit_chunk(c: int, w: int, p: plan_lib.Pass) -> int:
     return c
 
 
-def _cols_image_pass(xr, xi, p: plan_lib.Pass, inverse, interpret, chunk=None) -> Planes:
+def _cols_image_pass(
+    xr, xi, p: plan_lib.Pass, inverse, interpret, chunk=None,
+    degradations=None, index=None,
+) -> Planes:
+    """Column pass of a 2-D program, with the same retry → quarantine →
+    traced-XLA degradation protocol as the row passes (see
+    :func:`_apply_pass`)."""
+    return faults.run_leaf(
+        "pallas",
+        p.kind,
+        lambda: _cols_image_kernel(xr, xi, p, inverse, interpret, chunk),
+        lambda: _cols_image_xla(xr, xi, p, inverse),
+        degradations=degradations,
+        index=index,
+    )
+
+
+def _cols_image_xla(xr, xi, p: plan_lib.Pass, inverse) -> Planes:
+    """Traced-XLA execution of an axis -2 column pass (degradation target):
+    materialize the width transpose, run the generic 1-D fallback over the
+    column axis, transpose back."""
+    from repro.kernels import fft_gpu
+
+    b, rows, w = xr.shape
+    pencils, stride, f = p.view_in if p.view_in else (1, 1, p.n)
+    xt_r = jnp.swapaxes(xr, -1, -2).reshape(b * w, rows)
+    xt_i = jnp.swapaxes(xi, -1, -2).reshape(b * w, rows)
+    if pencils == 1 or f == rows:
+        # Whole-column transform (incl. the distributed driver's synthetic
+        # (q, q, n) pass): one natural-order row transform of length rows.
+        luts = _transform_luts(p, inverse)
+        yr, yi = fft_gpu._row_transform_xla(
+            xt_r, xt_i, p, luts, natural=p.order == "natural"
+        )
+    else:
+        # Strip-mined column factor: the re-tagged 1-D split program of the
+        # n2 axis applies verbatim on the transposed (B·w, n2) view.
+        yr, yi = fft_gpu._xla_pass(xt_r, xt_i, p, [], inverse)
+    yr = yr.reshape(b, w, rows).swapaxes(-1, -2)
+    yi = yi.reshape(b, w, rows).swapaxes(-1, -2)
+    return yr, yi
+
+
+def _cols_image_kernel(xr, xi, p: plan_lib.Pass, inverse, interpret, chunk=None) -> Planes:
     """Column pass of a 2-D program: transform axis -2 of the (B, n2, w)
     image view through the strided-pencil kernels, sweeping the image width
     chunk-by-chunk (``chunk`` overrides the VMEM-heuristic width — the
@@ -367,13 +445,15 @@ def execute_program(
     interpret: bool | None = None,
     batch_tiles: Mapping[int, int] | None = None,
     chunks: Mapping[int, int] | None = None,
+    degradations: list | None = None,
 ) -> Planes:
     """Walk a linearized pass program over 2-D (B, n) split planes.
 
     One ``pallas_call`` per pass; the only ops between passes are row-major
     reshapes (views, no HBM traffic).  ``chunks`` (pass index → grid-step
     width) carries the tuner's per-pass picks; unlisted passes fall back to
-    the VMEM-budget heuristic.
+    the VMEM-budget heuristic.  ``degradations`` (a plan's ledger) collects
+    any leaf demoted to the traced-XLA fallback.
     """
     if interpret is None:
         interpret = should_interpret()
@@ -382,6 +462,7 @@ def execute_program(
         xr, xi = _apply_pass(
             xr, xi, p, fs, inverse, interpret, batch_tiles,
             chunk=chunks.get(i) if chunks else None,
+            degradations=degradations, index=i,
         )
     return xr, xi
 
@@ -395,6 +476,7 @@ def execute_program2d(
     interpret: bool | None = None,
     batch_tiles: Mapping[int, int] | None = None,
     chunks: Mapping[int, int] | None = None,
+    degradations: list | None = None,
 ) -> Planes:
     """Walk a mixed-axis pass program over 3-D (B, n2, n) image planes.
 
@@ -415,11 +497,15 @@ def execute_program2d(
         b, rows, n = xr.shape
         chunk = chunks.get(i) if chunks else None
         if p.axis == -2:
-            xr, xi = _cols_image_pass(xr, xi, p, inverse, interpret, chunk=chunk)
+            xr, xi = _cols_image_pass(
+                xr, xi, p, inverse, interpret, chunk=chunk,
+                degradations=degradations, index=i,
+            )
             continue
         xr2, xi2 = _apply_pass(
             xr.reshape(b * rows, n), xi.reshape(b * rows, n),
             p, fs, inverse, interpret, batch_tiles, chunk=chunk,
+            degradations=degradations, index=i,
         )
         w = xr2.shape[-1]
         xr, xi = xr2.reshape(b, rows, w), xi2.reshape(b, rows, w)
@@ -453,6 +539,7 @@ def execute_plan(
     order: str = "natural",
     axis: int = -1,
     chunks: Mapping[int, int] | None = None,
+    degradations: list | None = None,
 ) -> Planes:
     """Execute a pre-computed :class:`~repro.core.plan.FFTPlan` with the
     Pallas kernels over ``axis`` (-1 or -2; any leading batch dims).
@@ -472,10 +559,12 @@ def execute_plan(
         interpret = should_interpret()
     if fft_plan.n2 is not None:
         if axis != -1:
-            raise ValueError("multi-axis plans always transform the last two axes")
+            raise faults.PlanError(
+                "multi-axis plans always transform the last two axes"
+            )
         rows, n = xr.shape[-2:]
         if (rows, n) != (fft_plan.n2, fft_plan.n):
-            raise ValueError(
+            raise faults.PlanError(
                 f"plan is for ({fft_plan.n2}, {fft_plan.n}) images, got ({rows}, {n})"
             )
         lead = xr.shape[:-2]
@@ -488,31 +577,34 @@ def execute_plan(
             interpret=interpret,
             batch_tiles=batch_tiles,
             chunks=chunks,
+            degradations=degradations,
         )
         return yr.reshape(*lead, rows, n), yi.reshape(*lead, rows, n)
     if axis == -2:
         n, q = xr.shape[-2:]
         if n != fft_plan.n:
-            raise ValueError(f"plan is for n={fft_plan.n}, axis -2 has n={n}")
+            raise faults.PlanError(f"plan is for n={fft_plan.n}, axis -2 has n={n}")
         lead = xr.shape[:-2]
         b = int(np.prod(lead)) if lead else 1
         if len(fft_plan.passes) == 1 and fft_plan.n > 1:
             p = _cols_plan_pass(fft_plan, q)
             yr, yi = _cols_image_pass(
-                xr.reshape(b, n, q), xi.reshape(b, n, q), p, inverse, interpret
+                xr.reshape(b, n, q), xi.reshape(b, n, q), p, inverse, interpret,
+                degradations=degradations,
             )
             return yr.reshape(*lead, n, q), yi.reshape(*lead, n, q)
         xr, xi = jnp.swapaxes(xr, -1, -2), jnp.swapaxes(xi, -1, -2)
         yr, yi = execute_plan(
             xr, xi, fft_plan, inverse=inverse, interpret=interpret,
             batch_tiles=batch_tiles, order=order, chunks=chunks,
+            degradations=degradations,
         )
         return jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
     if axis != -1:
-        raise ValueError(f"execute_plan handles axis -1 or -2, got {axis}")
+        raise faults.PlanError(f"execute_plan handles axis -1 or -2, got {axis}")
     n = xr.shape[-1]
     if n != fft_plan.n:
-        raise ValueError(f"plan is for n={fft_plan.n}, input has n={n}")
+        raise faults.PlanError(f"plan is for n={fft_plan.n}, input has n={n}")
     passes = (
         fft_plan.passes
         if order == "natural"
@@ -528,6 +620,7 @@ def execute_plan(
         interpret=interpret,
         batch_tiles=batch_tiles,
         chunks=chunks,
+        degradations=degradations,
     )
     # Inverse scaling is folded into each pass's transform LUT (1/f each);
     # the factors multiply so the total is exactly 1/n.

@@ -17,6 +17,7 @@ import argparse
 import jax
 
 from repro.configs.base import get_config
+from repro.core import faults
 from repro.configs.reduce import make_reduced
 from repro.models import model as model_lib
 from repro.serving.engine import Engine, ServeConfig
@@ -83,6 +84,19 @@ def main(argv=None):
                 f" insert {r['insert_s']:.4f}s generate {r['generate_s']:.4f}s]"
             )
         print(line)
+    fired = faults.fault_counters()
+    if fired or faults.quarantined():
+        # Chaos-drill visibility: injected sites that fired (REPRO_FAULTS)
+        # and kernels demoted to their XLA fallback this process.
+        print(
+            "faults: "
+            + (
+                " ".join(f"{site}x{n}" for site, n in sorted(fired.items()))
+                or "none"
+            )
+            + f"; quarantined={list(faults.quarantined())}"
+            + f"; degradations={len(faults.degradation_log())}"
+        )
     return rows
 
 

@@ -33,6 +33,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
 from repro.models import model as model_lib
 from repro.models import stack as stack_lib
 from repro.models.layers import spectral as spec_lib
@@ -90,6 +91,7 @@ class Engine:
         self._prefill = jax.jit(self._prefill_fn, static_argnames=("max_len",))
         self._insert = jax.jit(self._insert_fn)
         self._generate = jax.jit(self._generate_fn, static_argnames=("steps",))
+        self._release = jax.jit(self._release_fn)
 
     def _sample(self, key, logits):
         return sample(
@@ -116,6 +118,7 @@ class Engine:
     def prefill(self, prompts, *, max_len: int, key) -> PrefillResult:
         """Run one request's prompt (B, S) → :class:`PrefillResult` whose
         caches are laid out for a ``max_len``-slot decode state."""
+        faults.maybe_fail("serve.prefill", max_len=max_len)
         return self._prefill(self.params, jnp.asarray(prompts, jnp.int32), key,
                              max_len=max_len)
 
@@ -184,9 +187,10 @@ class Engine:
         starting at ``slot``.  Requires stream-mode spectral caches: the
         ring layout's shared step counter cannot represent per-slot
         timelines."""
+        faults.maybe_fail("serve.insert")
         for live in state.caches:
             if isinstance(live, spec_lib.SpectralCache):
-                raise ValueError(
+                raise faults.ServeError(
                     "insert needs spectral_decode_mode='stream' (the ring "
                     "cache keeps one global step counter and cannot join a "
                     "running batch)"
@@ -223,7 +227,23 @@ class Engine:
     def decode(self, state: DecodeState, steps: int):
         """Run ``steps`` decode steps as one compiled scan.  Returns
         (new_state, tokens (B, steps) int32 — ``eos_id`` for done slots)."""
+        faults.maybe_fail("serve.generate", steps=steps)
         return self._generate(self.params, state, steps=steps)
+
+    # -- slot release ------------------------------------------------------
+
+    def _release_fn(self, state, slot):
+        done = jax.lax.dynamic_update_slice(
+            state.done, jnp.ones((1,), bool), (slot,)
+        )
+        return state._replace(done=done)
+
+    def release(self, state: DecodeState, slot) -> DecodeState:
+        """Mark ``slot`` done (deadline reaping / cancellation): its caches
+        freeze and the scan emits ``eos_id`` filler until something is
+        inserted over it — exactly the state a naturally-finished slot is
+        left in."""
+        return self._release(state, jnp.asarray(slot, jnp.int32))
 
     # -- whole-batch convenience (the original API) ------------------------
 

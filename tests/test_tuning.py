@@ -73,7 +73,9 @@ def test_cache_round_trips_json(fresh_cache):
     other = tuning.TuningCache()
     assert other.get("k1") == {"config": {"block": 8192}, "mode": "measure"}
     with open(fresh_cache) as f:
-        assert json.load(f)["k1"]["mode"] == "measure"
+        doc = json.load(f)
+    assert doc["version"] == tuning.CACHE_SCHEMA_VERSION
+    assert doc["entries"]["k1"]["mode"] == "measure"
 
 
 # ---------------------------------------------------------------------------
